@@ -1,0 +1,50 @@
+"""Roofline report: renders the dry-run JSON into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline [dryrun_results.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def render(results: List[Dict], mesh: str = "16x16") -> List[str]:
+    rows = ["arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+            "t_memory_upper_s,bottleneck,useful_flop_ratio,"
+            "roofline_fraction"]
+    for c in results:
+        if c.get("mesh") != mesh:
+            continue
+        if "skipped" in c:
+            rows.append(f"{c['arch']},{c['shape']},{mesh},,,,,"
+                        f"SKIP({c['skipped'][:40]}),,")
+            continue
+        if "error" in c:
+            rows.append(f"{c['arch']},{c['shape']},{mesh},,,,,ERROR,,")
+            continue
+        tc, tm, tl = (c["t_compute_s"], c["t_memory_s"], c["t_collective_s"])
+        tmu = c.get("t_memory_upper_s", 0.0)
+        # roofline fraction: useful-compute time / achievable step time
+        # (bound = max of the three terms; fraction = t_useful / bound)
+        t_useful = c["model_flops_per_chip"] / 197e12
+        bound = max(tc, tm, tl)
+        frac = t_useful / bound if bound else 0.0
+        rows.append(
+            f"{c['arch']},{c['shape']},{mesh},{tc:.4g},{tm:.4g},{tl:.4g},"
+            f"{tmu:.4g},{c['bottleneck']},{c['useful_flop_ratio']:.3f},"
+            f"{frac:.3f}")
+    return rows
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    results = json.load(open(path))
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n# mesh {mesh}")
+        for r in render(results, mesh):
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

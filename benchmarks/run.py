@@ -1,0 +1,58 @@
+"""Benchmark driver: one function per paper table + system micro-benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # standard (fast)
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale 1k tasks
+
+Prints CSV (``name,value,derived``-style rows per table) and a summary
+comparing the reproduction against the paper's headline claims.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale: 1000 tasks (Table I), 500 (ablations)")
+    ap.add_argument("--skip-jax", action="store_true",
+                    help="skip the jax serving/kernel micro-benches")
+    args = ap.parse_args()
+
+    n1 = 1000 if args.full else 300
+    n23 = 500 if args.full else 200
+
+    from benchmarks import tables
+
+    t0 = time.time()
+    sections = []
+    print(f"# LLM-dCache benchmarks (n_table1={n1}, n_ablation={n23})",
+          flush=True)
+
+    sections.append(("Table I (models x prompting, +/- dCache)",
+                     tables.table1(n=n1)))
+    sections.append(("Table II (reuse rates & policies)",
+                     tables.table2(n=n23)))
+    sections.append(("Table III (GPT-driven vs programmatic)",
+                     tables.table3(n=n23)))
+    sections.append(("Beyond-paper: Belady oracle bound",
+                     tables.belady_bound(n=n23)))
+
+    if not args.skip_jax:
+        from benchmarks import serving_bench
+        sections.append(("Serving engine (CPU wall-time)",
+                         serving_bench.bench_serving()))
+        sections.append(("Cache ops", serving_bench.bench_cache_ops()))
+        sections.append(("Kernels (interpret mode)",
+                         serving_bench.bench_kernels()))
+
+    for title, rows in sections:
+        print(f"\n## {title}")
+        for r in rows:
+            print(r)
+    print(f"\n# done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Train a ~100M-class config (reduced for CPU) for a few hundred steps,
+with checkpointing, an injected node failure + automatic restore, and
+a resumable cold restart — the fault-tolerance path end to end.
+
+    PYTHONPATH=src python examples/train_tiny.py [--steps 200]
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.distributed import Checkpointer, FailureInjector, HeartbeatMonitor
+from repro.models import Init, init_model, unbox
+from repro.training import AdamWConfig, Prefetcher, TokenStream, TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen3-4b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    print(f"arch={cfg.name}  params={cfg.param_count()/1e6:.2f}M  "
+          f"devices={jax.device_count()}")
+    params, _ = unbox(init_model(Init(jax.random.PRNGKey(0),
+                                      dtype=cfg.jnp_dtype), cfg))
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        ck = Checkpointer(ckdir, keep=2)
+        mon = HeartbeatMonitor()
+        data = Prefetcher(TokenStream(cfg, batch=8, seq=64, seed=0))
+        fail_at = [args.steps // 3, args.steps // 2]
+        loop = TrainLoop(
+            cfg, AdamWConfig(lr=2e-3, warmup_steps=10,
+                             total_steps=args.steps),
+            params, data, checkpointer=ck, ckpt_every=20, monitor=mon,
+            failure_injector=FailureInjector(fail_at))
+        t0 = time.time()
+        loop.run(args.steps)
+        dt = time.time() - t0
+        print(f"loss {loop.history[0]:.3f} -> {loop.history[-1]:.3f} "
+              f"({args.steps} steps, {dt:.1f}s, "
+              f"{8*64*args.steps/dt:.0f} tok/s)")
+        print(f"injected failures at {fail_at}: "
+              f"{len(mon.failures)} recovered via checkpoint restore")
+        print(f"checkpoints kept: {ck.available_steps()}")
+
+        # cold restart: resume from the last checkpoint
+        loop2 = TrainLoop(cfg, AdamWConfig(), params,
+                          Prefetcher(TokenStream(cfg, 8, 64, seed=0)),
+                          checkpointer=ck)
+        assert loop2.restore_if_available()
+        print(f"cold restart resumes at step {loop2.step_idx} OK")
+        data.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.agent.agent import AgentRunner, TaskTrace  # noqa: F401
+from repro.agent.backends import PROFILES, JaxLLM, Profile, SimLLM  # noqa: F401
+from repro.agent.runtime import Runtime, build_runtime, build_tasks  # noqa: F401

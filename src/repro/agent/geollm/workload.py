@@ -1,0 +1,212 @@
+"""Benchmark sampler (paper §IV): multi-step geospatial tasks with a
+parameterised data-reuse rate, plus the model-checker that verifies each
+generated task's gold plan executes correctly.
+
+The GeoLLM-Engine-1k set is not public; this re-implements its *sampler*:
+1,000 multi-step prompts (~50k tool calls) whose probability of requiring
+data already in the working set is the ``reuse_rate`` (0.8 for the main
+benchmark; 0.0-0.8 for the Table II ablation), and a 500-query mini set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Any, Dict, List, Optional
+
+from repro.agent.geollm.datastore import (
+    CLASSES,
+    REGIONS,
+    GeoDataStore,
+    all_keys,
+)
+from repro.agent.geollm import geotools
+
+WORKING_SET = 5   # matches the cache capacity (5 entries)
+
+
+@dataclasses.dataclass
+class ToolCall:
+    name: str
+    args: Dict[str, Any]       # "$var" strings reference the env
+    out: Optional[str] = None
+
+
+@dataclasses.dataclass
+class Step:
+    kind: str                  # detect | lcc | vqa | plot | count | timeseries
+    key: str
+    prompt: str
+    plan: List[ToolCall]
+    gold: Any = None
+
+
+@dataclasses.dataclass
+class Task:
+    tid: int
+    query: str
+    steps: List[Step]
+    required_keys: List[str]
+
+    @property
+    def n_tool_calls(self) -> int:
+        return sum(len(s.plan) for s in self.steps) + len(self.required_keys)
+
+
+def _frame_var(key: str) -> str:
+    return f"frame_{key.replace('-', '_')}"
+
+
+def _mk_step(kind: str, key: str, rng: random.Random) -> Step:
+    region = rng.choice(sorted(REGIONS))
+    cls = rng.choice(CLASSES)
+    fv = "$" + _frame_var(key)
+    if kind == "detect":
+        prompt = f"Detect {cls}s in the {key} imagery around {region}."
+        plan = [
+            ToolCall("filter_bbox", {"frame": fv, "region": region}, "roi"),
+            ToolCall("filter_clouds", {"frame": "$roi", "max_pct": 60}, "clear"),
+            ToolCall("detect_objects", {"frame": "$clear", "class_name": cls},
+                     "answer"),
+            ToolCall("plot_images", {"frame": "$clear"}, "ui"),
+        ]
+    elif kind == "lcc":
+        prompt = f"Classify the dominant land cover near {region} in {key}."
+        plan = [
+            ToolCall("filter_bbox", {"frame": fv, "region": region}, "roi"),
+            ToolCall("dominant_land_covers", {"frame": "$roi", "top_k": 2},
+                     "answer"),
+            ToolCall("plot_heatmap", {"frame": "$roi", "value": "land_cover"},
+                     "ui"),
+        ]
+    elif kind == "vqa":
+        q = f"What does the {region} area look like?"
+        prompt = f"{q} (use {key})"
+        plan = [
+            ToolCall("filter_bbox", {"frame": fv, "region": region}, "roi"),
+            ToolCall("vqa_answer", {"frame": "$roi", "question": q}, "answer"),
+        ]
+    elif kind == "plot":
+        prompt = f"Plot the {cls} scenes from {key} around {region}."
+        plan = [
+            ToolCall("filter_bbox", {"frame": fv, "region": region}, "roi"),
+            ToolCall("filter_class", {"frame": "$roi", "class_name": cls},
+                     "sel"),
+            ToolCall("plot_images", {"frame": "$sel"}, "answer"),
+        ]
+    elif kind == "count":
+        m0, m1 = sorted(rng.sample(range(1, 13), 2))
+        prompt = (f"How many {key} images around {region} were taken between "
+                  f"months {m0} and {m1}?")
+        plan = [
+            ToolCall("filter_bbox", {"frame": fv, "region": region}, "roi"),
+            ToolCall("filter_date_range",
+                     {"frame": "$roi", "start_month": m0, "end_month": m1},
+                     "rng_sel"),
+            ToolCall("count_images", {"frame": "$rng_sel"}, "answer"),
+        ]
+    else:  # timeseries
+        prompt = f"Show the monthly acquisition counts for {key} at {region}."
+        plan = [
+            ToolCall("filter_bbox", {"frame": fv, "region": region}, "roi"),
+            ToolCall("sort_by_time", {"frame": "$roi"}, "sorted"),
+            ToolCall("timeseries", {"frame": "$sorted", "freq": "month"},
+                     "answer"),
+        ]
+    return Step(kind=kind, key=key, prompt=prompt, plan=plan)
+
+
+STEP_KINDS = ("detect", "lcc", "vqa", "plot", "count", "timeseries")
+
+
+class WorkloadSampler:
+    """Samples tasks whose keys repeat with probability ``reuse_rate``."""
+
+    def __init__(self, reuse_rate: float = 0.8, seed: int = 0):
+        self.reuse_rate = reuse_rate
+        self.rng = random.Random(seed)
+        self.keys = all_keys()
+        self.working: List[str] = []
+
+    def _sample_key(self) -> str:
+        if self.working and self.rng.random() < self.reuse_rate:
+            return self.rng.choice(self.working)
+        key = self.rng.choice(self.keys)
+        self.working.append(key)
+        if len(self.working) > WORKING_SET:
+            self.working.pop(0)
+        return key
+
+    def sample_task(self, tid: int) -> Task:
+        n_steps = self.rng.randint(3, 5)
+        steps, keys = [], []
+        for _ in range(n_steps):
+            kind = self.rng.choice(STEP_KINDS)
+            key = self._sample_key()
+            steps.append(_mk_step(kind, key, self.rng))
+            if key not in keys:
+                keys.append(key)
+        query = " Then, ".join(s.prompt for s in steps)
+        return Task(tid=tid, query=query, steps=steps, required_keys=keys)
+
+    def sample(self, n: int) -> List[Task]:
+        return [self.sample_task(i) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Gold execution + model checker
+# ---------------------------------------------------------------------------
+
+def execute_plan(step: Step, env: Dict[str, Any]) -> Any:
+    """Run a step's gold plan against an env of frame variables."""
+    fns = {n: getattr(geotools, n) for n in (
+        "filter_bbox", "filter_class", "filter_clouds", "filter_date_range",
+        "count_images", "detect_objects", "land_cover_stats",
+        "dominant_land_covers", "vqa_answer", "image_stats", "sample_images",
+        "sort_by_time", "merge_frames", "plot_images", "plot_heatmap",
+        "timeseries")}
+    local = dict(env)
+    answer = None
+    for call in step.plan:
+        args = {k: (local[v[1:]] if isinstance(v, str) and v.startswith("$")
+                    else v) for k, v in call.args.items()}
+        out = fns[call.name](**args)
+        if call.out:
+            local[call.out] = out
+        if call.out == "answer":
+            answer = out
+    return answer
+
+
+def compute_gold(tasks: List[Task], store: GeoDataStore) -> None:
+    """Fill ``step.gold`` (latency-free peek — the checker's oracle)."""
+    for t in tasks:
+        env = {_frame_var(k): store.peek(k) for k in t.required_keys}
+        for s in t.steps:
+            s.gold = execute_plan(s, env)
+
+
+def model_check(tasks: List[Task], store: GeoDataStore) -> List[int]:
+    """Paper §IV: 'use the model-checker module to verify the functional
+    correctness of the generated tasks'. Returns ids of BROKEN tasks."""
+    bad = []
+    for t in tasks:
+        try:
+            env = {_frame_var(k): store.peek(k) for k in t.required_keys}
+            for s in t.steps:
+                a = execute_plan(s, env)
+                if a is None or (s.gold is not None and
+                                 repr(a) != repr(s.gold)):
+                    raise ValueError(f"step gold mismatch in task {t.tid}")
+        except Exception:
+            bad.append(t.tid)
+    return bad
+
+
+def make_benchmark(n_tasks: int = 1000, reuse_rate: float = 0.8,
+                   seed: int = 0, store: Optional[GeoDataStore] = None,
+                   ) -> List[Task]:
+    tasks = WorkloadSampler(reuse_rate, seed).sample(n_tasks)
+    if store is not None:
+        compute_gold(tasks, store)
+        assert not model_check(tasks, store)
+    return tasks

@@ -1,0 +1,67 @@
+"""One-call assembly of the full LLM-dCache runtime: clock, datastore,
+tools, cache, controller, agent — the harness every benchmark/example uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.agent.agent import AgentRunner, TaskTrace
+from repro.agent.backends import Profile, SimLLM
+from repro.agent.geollm.datastore import GeoDataStore
+from repro.agent.geollm.evaluator import Report, evaluate
+from repro.agent.geollm.geotools import make_geo_tools
+from repro.agent.geollm.simclock import SimClock
+from repro.agent.geollm.workload import Task, compute_gold, make_benchmark
+from repro.core.cache import DataCache
+from repro.core.controller import make_controller
+from repro.core.policies import make_policy
+from repro.core.tools import ToolRegistry, make_cache_tools
+
+
+@dataclasses.dataclass
+class Runtime:
+    clock: SimClock
+    store: GeoDataStore
+    cache: DataCache
+    registry: ToolRegistry
+    runner: AgentRunner
+    llm: SimLLM
+
+    def run(self, tasks: List[Task]) -> List[TaskTrace]:
+        return [self.runner.run_task(t) for t in tasks]
+
+    def run_and_evaluate(self, tasks: List[Task]) -> Report:
+        traces = self.run(tasks)
+        return evaluate(tasks, traces, self.cache.stats)
+
+
+def build_runtime(*, model: str = "gpt-4-turbo", prompting: str = "cot",
+                  few_shot: bool = True, use_cache: bool = True,
+                  policy: str = "lru", read_impl: str = "llm",
+                  update_impl: str = "llm", capacity: int = 5,
+                  seed: int = 0, llm=None) -> Runtime:
+    clock = SimClock()
+    store = GeoDataStore(clock)
+    cache = DataCache(capacity, clock=clock.now)
+    sim = llm or SimLLM(Profile(model, prompting, few_shot), seed=seed)
+    pol = make_policy(policy) if policy != "belady" else make_policy(policy)
+    if not use_cache:
+        read_impl = update_impl = "python"
+    controller = make_controller(cache, pol, llm=sim,
+                                 read_impl=read_impl,
+                                 update_impl=update_impl,
+                                 few_shot=few_shot)
+    registry = ToolRegistry(make_cache_tools(cache, store, clock)
+                            + make_geo_tools(clock))
+    runner = AgentRunner(registry, controller, sim, clock, store,
+                         use_cache=use_cache)
+    return Runtime(clock=clock, store=store, cache=cache, registry=registry,
+                   runner=runner, llm=sim)
+
+
+def build_tasks(n: int, reuse_rate: float = 0.8, seed: int = 0,
+                store: Optional[GeoDataStore] = None) -> List[Task]:
+    if store is None:
+        store = GeoDataStore(SimClock())
+    return make_benchmark(n, reuse_rate, seed, store)

@@ -1,0 +1,181 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+``input_specs`` builds the exact pytree of ``jax.ShapeDtypeStruct`` that the
+corresponding step function (``train_step`` / ``prefill_step`` /
+``decode_step``) takes — no device allocation, weak-type-correct, shardable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524_288, 1, "decode")
+
+SHAPES: Dict[str, ShapeSpec] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else a skip reason (DESIGN §4)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return "pure full-attention arch: 500K dense-KV decode is skipped"
+    return None
+
+
+def effective_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """KV entries actually retained at decode time (SWA/chunk bound it)."""
+    cap = seq_len
+    if cfg.sliding_window is not None:
+        cap = min(cap, cfg.sliding_window)
+    if cfg.attn_chunk is not None:
+        cap = min(cap, cfg.attn_chunk)
+    return cap
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the decode-time cache pytree.
+
+    Layer-stacked leading dim L so the model can ``lax.scan`` over layers.
+    """
+    dt = cfg.jnp_dtype
+    L = cfg.n_layers
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+    if not cfg.attn_free:
+        C = effective_cache_len(cfg, seq_len)
+        kv = cfg.n_kv_heads * cfg.head_dim_
+        kv_dt = jnp.int8 if cfg.kv_quant else dt
+        specs["k"] = jax.ShapeDtypeStruct((L, batch, C, kv), kv_dt)
+        specs["v"] = jax.ShapeDtypeStruct((L, batch, C, kv), kv_dt)
+        if cfg.kv_quant:
+            H = cfg.n_kv_heads
+            specs["k_scale"] = jax.ShapeDtypeStruct((L, batch, C, H), dt)
+            specs["v_scale"] = jax.ShapeDtypeStruct((L, batch, C, H), dt)
+    if cfg.family in ("ssm", "hybrid"):
+        ssm = cfg.ssm
+        H, hd = cfg.n_ssm_heads, ssm.head_dim
+        # rwkv's WKV state is the square (hd_k x hd_v) outer-product matrix
+        st = hd if ssm.kind == "rwkv6" else ssm.state_size
+        # recurrent state is held in fp32 for numerical stability of the scan
+        specs["ssm_state"] = jax.ShapeDtypeStruct((L, batch, H, hd, st), jnp.float32)
+        if cfg.family == "ssm":  # rwkv6 token-shift states (time-mix, channel-mix)
+            specs["shift_tm"] = jax.ShapeDtypeStruct((L, batch, cfg.d_model), dt)
+            specs["shift_cm"] = jax.ShapeDtypeStruct((L, batch, cfg.d_model), dt)
+        if cfg.ssm.kind == "mamba" and cfg.ssm.conv_width > 1:
+            cw = cfg.ssm.conv_width
+            specs["conv_state"] = jax.ShapeDtypeStruct(
+                (L, batch, cw - 1, H * hd), dt)
+    if cfg.is_encdec:
+        enc_len = seq_len // 2
+        kvd = cfg.n_kv_heads * cfg.head_dim_
+        specs["cross_k"] = jax.ShapeDtypeStruct((L, batch, enc_len, kvd), dt)
+        specs["cross_v"] = jax.ShapeDtypeStruct((L, batch, enc_len, kvd), dt)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, object]:
+    """Data-argument specs for the step function of ``shape.kind``.
+
+    Modality frontends ([audio]/[vlm]) are STUBS: ``frames``/``patches`` are
+    precomputed embeddings handed in directly, per the assignment note.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.jnp_dtype
+    tok = jnp.int32
+
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            enc_len, dec_len = S // 2, S // 2
+            return {
+                "frames": jax.ShapeDtypeStruct((B, enc_len, cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((B, dec_len), tok),
+                "targets": jax.ShapeDtypeStruct((B, dec_len), tok),
+            }
+        batch = {}
+        text_len = S
+        if cfg.frontend == "vision_patches":
+            n = cfg.n_frontend_tokens
+            text_len = S - n
+            batch["patches"] = jax.ShapeDtypeStruct((B, n, cfg.d_model), dt)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, text_len), tok)
+        batch["targets"] = jax.ShapeDtypeStruct((B, text_len), tok)
+        return batch
+
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            enc_len, dec_len = S // 2, S // 2
+            return {
+                "frames": jax.ShapeDtypeStruct((B, enc_len, cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((B, dec_len), tok),
+            }
+        batch = {}
+        text_len = S
+        if cfg.frontend == "vision_patches":
+            n = cfg.n_frontend_tokens
+            text_len = S - n
+            batch["patches"] = jax.ShapeDtypeStruct((B, n, cfg.d_model), dt)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, text_len), tok)
+        return batch
+
+    assert shape.kind == "decode"
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), tok),
+        "cache": cache_specs(cfg, B, S),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Logical sharding axes for the data-argument pytrees (dry-run in_shardings)
+# ---------------------------------------------------------------------------
+
+_CACHE_AXES = {
+    "pos": ("batch",),
+    "k": ("layers", "batch", "cache_seq", "kv"),
+    "v": ("layers", "batch", "cache_seq", "kv"),
+    "k_scale": ("layers", "batch", "cache_seq", ""),
+    "v_scale": ("layers", "batch", "cache_seq", ""),
+    "ssm_state": ("layers", "batch", "", "", ""),
+    "shift_tm": ("layers", "batch", "act_embed"),
+    "shift_cm": ("layers", "batch", "act_embed"),
+    "conv_state": ("layers", "batch", "", "ssm_dim"),
+    "cross_k": ("layers", "batch", "cache_seq", "kv"),
+    "cross_v": ("layers", "batch", "cache_seq", "kv"),
+}
+
+_BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "targets": ("batch", "seq"),
+    "frames": ("batch", "seq", "act_embed"),
+    "patches": ("batch", "seq", "act_embed"),
+}
+
+
+def input_axes(cfg: ModelConfig, shape: ShapeSpec):
+    """Logical-axes pytree matching ``input_specs`` structure."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out["cache"] = {ck: _CACHE_AXES[ck] for ck in v}
+        else:
+            out[k] = _BATCH_AXES[k]
+    return out

@@ -1,0 +1,22 @@
+"""LLM-dCache core: the paper's contribution.
+
+Cache mechanism (``cache``), eviction policies with natural-language
+descriptions (``policies``), cache ops as callable tools (``tools``),
+programmatic vs GPT-driven controllers (``controller``), prompt templates
+(``prompts``), and multi-pod localized caching (``distributed_cache``).
+"""
+from repro.core.cache import CacheEntry, CacheStats, DataCache  # noqa: F401
+from repro.core.controller import (  # noqa: F401
+    LLMController,
+    ProgrammaticController,
+    ReadPlan,
+    make_controller,
+)
+from repro.core.distributed_cache import PodLocalCacheRouter  # noqa: F401
+from repro.core.policies import POLICIES, Policy, make_policy  # noqa: F401
+from repro.core.tools import (  # noqa: F401
+    ToolRegistry,
+    ToolResult,
+    ToolSpec,
+    make_cache_tools,
+)

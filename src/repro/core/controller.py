@@ -1,0 +1,163 @@
+"""Cache-decision controllers: programmatic (the paper's upper bound) and
+GPT-driven via prompting (the paper's contribution, Table III rows 2-4).
+
+The two decision points are factored exactly as in the paper:
+  * read  — read_cache vs load_db per required key;
+  * update — new cache state after this round's loads (policy-by-prompt).
+
+Either side can independently be "python" or "llm", reproducing the four
+Table III configurations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.cache import DataCache
+from repro.core.policies import Policy
+from repro.core.prompts import (
+    parse_json_tail,
+    read_decision_prompt,
+    update_decision_prompt,
+)
+
+
+@dataclasses.dataclass
+class ReadPlan:
+    """Per-key tool choice ("read_cache" | "load_db")."""
+    choices: Dict[str, str]
+    prompt_tokens: int = 0
+    completion_tokens: int = 0
+
+
+class ProgrammaticController:
+    """Direct Python implementation (Table III row 1 / 'upper bound')."""
+
+    kind = "python"
+
+    def __init__(self, cache: DataCache, policy: Policy):
+        self.cache = cache
+        self.policy = policy
+
+    # -- read ---------------------------------------------------------------
+    def plan_reads(self, query: str, required_keys: Sequence[str],
+                   few_shot: bool = False) -> ReadPlan:
+        return ReadPlan({k: ("read_cache" if k in self.cache else "load_db")
+                         for k in required_keys})
+
+    # -- update -------------------------------------------------------------
+    def update(self, loads: Sequence[str], loader: Callable[[str], Any],
+               size_of: Callable[[Any], int]) -> None:
+        for k in loads:
+            if k in self.cache:
+                continue
+            victim = None
+            if len(self.cache) >= self.cache.capacity:
+                victim = self.policy.victim(self.cache.entries())
+            v = loader(k)
+            self.cache.put(k, v, size_of(v), victim=victim)
+
+
+class LLMController:
+    """GPT-driven cache operations: both decisions made by prompting an LLM.
+
+    ``read_impl`` / ``update_impl`` select "llm" or "python" per decision
+    point (the Table III grid). The LLM is any backend with
+    ``complete(prompt) -> str`` (SimLLM offline, JaxLLM for the real served
+    model).
+    """
+
+    kind = "llm"
+
+    def __init__(self, cache: DataCache, policy: Policy, llm,
+                 read_impl: str = "llm", update_impl: str = "llm",
+                 few_shot: bool = True):
+        self.cache = cache
+        self.policy = policy
+        self.llm = llm
+        self.read_impl = read_impl
+        self.update_impl = update_impl
+        self.few_shot = few_shot
+        self._fallback = ProgrammaticController(cache, policy)
+
+    # -- read ---------------------------------------------------------------
+    def plan_reads(self, query: str, required_keys: Sequence[str],
+                   few_shot: Optional[bool] = None) -> ReadPlan:
+        if self.read_impl == "python" or not required_keys:
+            return self._fallback.plan_reads(query, required_keys)
+        fs = self.few_shot if few_shot is None else few_shot
+        prompt = read_decision_prompt(query, required_keys,
+                                      self.cache.contents_json(), fs)
+        completion = self.llm.complete(prompt)
+        stats = self.cache.stats
+        try:
+            raw = parse_json_tail(completion)
+        except ValueError:
+            raw = {}
+        choices: Dict[str, str] = {}
+        for k in required_keys:
+            c = raw.get(k) if isinstance(raw, dict) else None
+            if c not in ("read_cache", "load_db"):
+                c = "load_db"  # malformed decision -> safe slow path
+            correct = (c == "read_cache") == (k in self.cache)
+            stats.llm_total_decisions += 1
+            stats.llm_correct_decisions += int(correct)
+            choices[k] = c
+        return ReadPlan(choices,
+                        prompt_tokens=len(prompt) // 4,
+                        completion_tokens=len(completion) // 4)
+
+    # -- update -------------------------------------------------------------
+    def update(self, loads: Sequence[str], loader: Callable[[str], Any],
+               size_of: Callable[[Any], int]) -> Dict[str, int]:
+        if self.update_impl == "python":
+            self._fallback.update(loads, loader, size_of)
+            return {"prompt_tokens": 0, "completion_tokens": 0}
+        new_loads = [k for k in loads if k not in self.cache]
+        if not new_loads:
+            # still refresh recency metadata for reused keys
+            return {"prompt_tokens": 0, "completion_tokens": 0}
+        prompt = update_decision_prompt(
+            self.policy.describe(), new_loads, self.cache.contents_json(),
+            self.cache.capacity, self.few_shot)
+        completion = self.llm.complete(prompt)
+        stats = self.cache.stats
+        try:
+            new_state = parse_json_tail(completion)
+            assert isinstance(new_state, list)
+            new_state = [str(k) for k in new_state]
+        except (ValueError, AssertionError):
+            new_state = None
+        # grade the LLM's update against the programmatic policy
+        expected = self._expected_state(new_loads)
+        stats.llm_total_decisions += 1
+        stats.llm_correct_decisions += int(
+            new_state is not None and set(new_state) == set(expected))
+        if new_state is None:
+            new_state = expected  # unparseable -> programmatic fallback
+        self.cache.apply_state(new_state, loader, size_of)
+        return {"prompt_tokens": len(prompt) // 4,
+                "completion_tokens": len(completion) // 4}
+
+    def _expected_state(self, new_loads: Sequence[str]) -> List[str]:
+        keys = list(self.cache.keys())
+        entries = dict(self.cache.entries())
+        for k in new_loads:
+            if k in keys:
+                continue
+            if len(keys) >= self.cache.capacity:
+                victim = self.policy.victim(
+                    {kk: entries[kk] for kk in keys if kk in entries})
+                keys.remove(victim)
+            keys.append(k)
+        return keys
+
+
+def make_controller(cache: DataCache, policy: Policy, *, llm=None,
+                    read_impl: str = "python", update_impl: str = "python",
+                    few_shot: bool = True):
+    if read_impl == "python" and update_impl == "python":
+        return ProgrammaticController(cache, policy)
+    assert llm is not None, "LLM-driven cache ops need an llm backend"
+    return LLMController(cache, policy, llm, read_impl=read_impl,
+                         update_impl=update_impl, few_shot=few_shot)

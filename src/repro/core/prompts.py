@@ -1,0 +1,85 @@
+"""Prompt templates for GPT-driven cache operations (paper Fig. 2).
+
+Two prompt-based decisions:
+  * READ  — given the user query and current cache contents, choose
+            ``read_cache(key)`` vs ``load_db(key)`` per required key.
+  * UPDATE — the eviction policy is *described in natural language*; the LLM
+            is given this round's loads + cache contents (JSON) and returns
+            the updated cache state.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence
+
+SYSTEM_HEADER = (
+    "As a Copilot handling geospatial data, you have access to the following "
+    "tools [...]\n"
+    " - load_db(key): load imagery metadata for `dataset-year` from the "
+    "remote database (slow)\n"
+    " - read_cache(key): read imagery metadata for `dataset-year` from the "
+    "local cache (fast; fails if the key is not cached)\n"
+)
+
+READ_FEWSHOT = """Example 1:
+Query: Plot the xview1 images from 2022
+Cache: {}
+Thought: The user asks for the xview1-2022 imagery. The cache is empty, so I must go to the database.
+Action: To complete the task I will call load_db(xview1-2022), then plot the results.
+
+Example 2:
+Query: Show fair1m and xview1 imgs from 2022
+Cache: {"xview1-2022": {...}}
+Thought: The user wants both fair1m-2022 and xview1-2022. The cache already contains the latter, so only fair1m must come from the database.
+Action: To complete the task I will first call load_db(fair1m-2022), then read_cache(xview1-2022).
+"""
+
+
+def read_decision_prompt(query: str, required_keys: Sequence[str],
+                         cache_json: str, few_shot: bool) -> str:
+    parts = [SYSTEM_HEADER]
+    if few_shot:
+        parts.append(READ_FEWSHOT)
+    parts.append(
+        "Given the user query, the cache content, and the examples above, "
+        "decide for EACH required data key whether to call read_cache(key) "
+        "or load_db(key). Respond with a JSON object mapping each key to "
+        "\"read_cache\" or \"load_db\".\n")
+    parts.append(f"User Query: {query}\n")
+    parts.append(f"Required keys: {json.dumps(sorted(required_keys))}\n")
+    parts.append(f"Cache: {cache_json}\n")
+    parts.append("Answer (JSON): ")
+    return "".join(parts)
+
+
+def update_decision_prompt(policy_text: str, loads: Sequence[str],
+                           cache_json: str, capacity: int,
+                           few_shot: bool) -> str:
+    parts = [SYSTEM_HEADER,
+             "You are now the cache controller. Apply the cache update "
+             "policy below and return the NEW cache state as a JSON list of "
+             f"keys (at most {capacity} entries).\n",
+             f"Update policy: {policy_text}\n"]
+    if few_shot:
+        parts.append(
+            'Example: policy=LRU, capacity=2, cache={"a": {"last_access": 1},'
+            ' "b": {"last_access": 5}}, this round loaded ["c"].\n'
+            'Thought: the cache is full; "a" is least recent; evict "a".\n'
+            'Answer: ["b", "c"]\n')
+    parts.append(f"Current cache: {cache_json}\n")
+    parts.append(f"Keys loaded from the database this round: "
+                 f"{json.dumps(list(loads))}\n")
+    parts.append("Answer (JSON list of keys): ")
+    return "".join(parts)
+
+
+def parse_json_tail(text: str):
+    """Parse the trailing JSON object/list from an LLM completion."""
+    text = text.strip()
+    for start in range(len(text)):
+        if text[start] in "[{":
+            try:
+                return json.loads(text[start:])
+            except json.JSONDecodeError:
+                continue
+    raise ValueError(f"no JSON found in completion: {text[:200]!r}")

@@ -1,0 +1,122 @@
+"""Cache operations as callable API tools (the paper's key design choice).
+
+``read_cache`` / ``load_db`` are ordinary :class:`ToolSpec` entries exposed
+in the function-calling schema *alongside every other platform tool*, so the
+LLM plans cache usage exactly the way it plans any tool call, and a cache
+miss is just a failed tool call it re-plans around.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class ToolSpec:
+    name: str
+    description: str
+    parameters: Dict[str, Any]          # JSON-schema properties
+    fn: Callable[..., Any]
+    latency_s: float = 0.0              # modeled execution latency (SimClock)
+
+    def schema(self) -> Dict[str, Any]:
+        """OpenAI-style function-calling schema entry."""
+        return {
+            "type": "function",
+            "function": {
+                "name": self.name,
+                "description": self.description,
+                "parameters": {"type": "object", "properties": self.parameters,
+                               "required": list(self.parameters)},
+            },
+        }
+
+
+@dataclasses.dataclass
+class ToolResult:
+    name: str
+    ok: bool
+    value: Any = None
+    error: str = ""
+    latency_s: float = 0.0
+
+
+class ToolError(Exception):
+    pass
+
+
+def make_cache_tools(cache, datastore, clock) -> List[ToolSpec]:
+    """The two dCache tools. ``datastore`` is "main memory" (5-10x slower,
+    paper §IV); ``clock`` is the SimClock that accumulates modeled latency."""
+
+    def read_cache(key: str):
+        t0 = clock.now()
+        value = cache.get(key)          # raises KeyError on miss
+        clock.advance(datastore.cache_read_latency(key))
+        return value
+
+    def load_db(key: str):
+        value = datastore.load(key)     # advances clock by DB latency itself
+        return value
+
+    return [
+        ToolSpec(
+            name="read_cache",
+            description=("Read imagery metadata for a `dataset-year` key "
+                         "from the LOCAL CACHE. Fast (local). Fails if the "
+                         "key is not currently cached."),
+            parameters={"key": {"type": "string",
+                                "description": "dataset-year, e.g. xview1-2022"}},
+            fn=read_cache),
+        ToolSpec(
+            name="load_db",
+            description=("Load imagery metadata for a `dataset-year` key "
+                         "from the REMOTE DATABASE. Slow (network + storage)."),
+            parameters={"key": {"type": "string",
+                                "description": "dataset-year, e.g. xview1-2022"}},
+            fn=load_db),
+    ]
+
+
+class ToolRegistry:
+    """Function-calling registry: schemas for the prompt, dispatch at runtime."""
+
+    def __init__(self, tools: Optional[List[ToolSpec]] = None):
+        self._tools: Dict[str, ToolSpec] = {}
+        for t in tools or []:
+            self.register(t)
+
+    def register(self, tool: ToolSpec):
+        if tool.name in self._tools:
+            raise ValueError(f"duplicate tool {tool.name}")
+        self._tools[tool.name] = tool
+
+    def names(self) -> List[str]:
+        return sorted(self._tools)
+
+    def schemas(self) -> List[Dict[str, Any]]:
+        return [self._tools[n].schema() for n in self.names()]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._tools
+
+    def get(self, name: str) -> ToolSpec:
+        return self._tools[name]
+
+    def call(self, name: str, clock=None, **kwargs) -> ToolResult:
+        if name not in self._tools:
+            return ToolResult(name=name, ok=False,
+                              error=f"unknown tool {name!r}; available: "
+                                    f"{self.names()}")
+        spec = self._tools[name]
+        t0 = time.perf_counter()
+        if clock is not None and spec.latency_s:
+            clock.advance(spec.latency_s)
+        try:
+            value = spec.fn(**kwargs)
+            return ToolResult(name=name, ok=True, value=value,
+                              latency_s=time.perf_counter() - t0)
+        except (ToolError, KeyError, ValueError) as e:
+            return ToolResult(name=name, ok=False, error=str(e),
+                              latency_s=time.perf_counter() - t0)

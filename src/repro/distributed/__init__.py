@@ -1,0 +1,17 @@
+from repro.distributed.checkpoint import Checkpointer  # noqa: F401
+from repro.distributed.elastic import mesh_transition_plan, reshard_tree  # noqa: F401
+from repro.distributed.fault_tolerance import (  # noqa: F401
+    FailureInjector,
+    HeartbeatMonitor,
+    PreemptionGuard,
+    WorkerFailure,
+)
+from repro.distributed.sharding import (  # noqa: F401
+    constrain,
+    logical_to_spec,
+    multi_pod_rules,
+    named_sharding,
+    sharding_context,
+    single_pod_rules,
+    tree_shardings,
+)

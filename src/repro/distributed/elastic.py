@@ -1,0 +1,45 @@
+"""Elastic scaling: re-shard a logically-stored checkpoint onto a different
+mesh (grow/shrink the fleet between runs, or drop a failed pod).
+
+Checkpoints (``repro.distributed.checkpoint``) store arrays at full logical
+shape; ``reshard_tree`` just lays them out on the new mesh with shardings
+re-derived from the same logical axes + rules — the divisibility fallback
+in ``sharding.py`` guarantees a valid placement on ANY mesh shape.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import named_sharding
+
+
+def reshard_tree(values, axes_tree, mesh: Mesh, rules: Dict):
+    """Place a host-side pytree onto ``mesh`` with rule-derived shardings."""
+    def place(v, ax):
+        arr = np.asarray(v)
+        sh = named_sharding(ax, arr.shape, mesh, rules)
+        return jax.device_put(arr, sh)
+
+    return jax.tree.map(
+        place, values, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(a, str) for a in x))
+
+
+def mesh_transition_plan(old_shape: Dict[str, int],
+                         new_shape: Dict[str, int]) -> Dict[str, str]:
+    """Human-readable elastic transition summary (logged by the launcher)."""
+    plan = {}
+    for ax in sorted(set(old_shape) | set(new_shape)):
+        o, n = old_shape.get(ax, 1), new_shape.get(ax, 1)
+        if o == n:
+            plan[ax] = f"keep {o}"
+        elif n > o:
+            plan[ax] = f"grow {o}->{n} (re-shard, {n // max(o,1)}x more slices)"
+        else:
+            plan[ax] = f"shrink {o}->{n} (gather + re-slice)"
+    return plan

@@ -1,0 +1,177 @@
+"""Logical-axis sharding with divisibility fallback (DESIGN §5).
+
+Every parameter / activation dimension carries a logical name; ``rules`` map
+names to mesh axes. Any assignment whose dimension is not divisible by the
+mesh-axis extent silently falls back to replication — this single mechanism
+is what lets all 40 (arch x shape) cells compile on both production meshes
+(49,155-entry vocabs, 25-head attention, 8-expert MoE on a 16-way axis...).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[str, ...]  # logical axis names, one per tensor dim ("" = none)
+Rule = Union[None, str, Tuple[str, ...]]
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+def single_pod_rules() -> Dict[str, Rule]:
+    return {
+        # weights
+        "vocab": "model",
+        "embed": "data",        # FSDP axis
+        "mlp": "model",         # tensor parallel
+        "heads": "model",       # flattened n_heads*head_dim
+        "kv": "model",          # flattened n_kv_heads*head_dim
+        "experts": None,
+        "layers": None,
+        "lora": None,
+        "ssm_dim": "model",     # flattened ssm_heads*head_dim
+        "ssm_state": None,
+        "conv": None,
+        # activations
+        "batch": "data",
+        "seq": None,
+        "act_embed": None,
+        "act_mlp": "model",
+        "act_heads": "model",
+        "act_kv": "model",
+        "cache_seq": None,
+        # MoE dispatch buffers (G,E,C,D): token-group dim in baseline
+        "moe_tokens": "data",
+    }
+
+
+def multi_pod_rules() -> Dict[str, Rule]:
+    r = single_pod_rules()
+    # FSDP over all 512 chips; data parallel batch over pod x data
+    r["embed"] = ("pod", "data")
+    r["batch"] = ("pod", "data")
+    r["moe_tokens"] = ("pod", "data")
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Hillclimb variants (EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+def expert_parallel_rules(base: Dict[str, Rule]) -> Dict[str, Rule]:
+    """Expert parallelism: expert weights shard over the FSDP axis instead
+    of being replicated + FSDP-gathered; tokens all-to-all into expert
+    shards (dispatch buffers switch from token-sharded to expert-sharded).
+    Requires n_experts %% data == 0 (divisibility fallback keeps it safe)."""
+    r = dict(base)
+    r["experts"] = base["embed"]   # E takes over the FSDP axis
+    r["moe_tokens"] = None
+    # expert weight tensors are (layers, experts, embed, mlp): "experts"
+    # precedes "embed", so the one-axis-per-spec dedupe automatically drops
+    # the FSDP axis from the embed dim of expert weights only.
+    return r
+
+
+def serve_rules(base: Dict[str, Rule]) -> Dict[str, Rule]:
+    """Decode-time weight layout: pure TP for the dense weights (no per-step
+    FSDP all-gather — the decode step is too small to amortise one) plus
+    expert parallelism for MoE weights. Dense per-chip footprint grows to
+    P_dense*2/|model|, which fits for every assigned arch."""
+    r = expert_parallel_rules(base)
+    r["embed"] = None          # dense weights: replicate over data, TP on model
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Spec derivation
+# ---------------------------------------------------------------------------
+
+def _axis_entry(dim: int, rule: Rule, mesh: Mesh) -> Rule:
+    """Mesh assignment for one dim, dropping it if not divisible."""
+    if rule is None:
+        return None
+    names = (rule,) if isinstance(rule, str) else tuple(rule)
+    names = tuple(n for n in names if n in mesh.shape)
+    if not names:
+        return None
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    if dim % size != 0:
+        # try progressively shorter prefixes before replicating
+        for k in range(len(names) - 1, 0, -1):
+            sz = 1
+            for n in names[:k]:
+                sz *= mesh.shape[n]
+            if dim % sz == 0:
+                return names[:k] if k > 1 else names[0]
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def logical_to_spec(axes: Axes, shape: Sequence[int], mesh: Mesh,
+                    rules: Dict[str, Rule]) -> P:
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} rank != shape {tuple(shape)} rank")
+    entries, used = [], set()
+    for dim, name in zip(shape, axes):
+        e = _axis_entry(dim, rules.get(name), mesh) if name else None
+        # a mesh axis may appear at most once in a PartitionSpec
+        if e is not None:
+            flat = (e,) if isinstance(e, str) else e
+            if any(f in used for f in flat):
+                e = None
+            else:
+                used.update(flat)
+        entries.append(e)
+    return P(*entries)
+
+
+def named_sharding(axes: Axes, shape: Sequence[int], mesh: Mesh,
+                   rules: Dict[str, Rule]) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, shape, mesh, rules))
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules: Dict[str, Rule]):
+    """Map (axes pytree, ShapeDtypeStruct pytree) -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda ax, s: named_sharding(ax, s.shape, mesh, rules),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, str) for a in x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context (no-op outside a mesh context)
+# ---------------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Dict[str, Rule]] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Dict[str, Rule]):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def constrain(x: jax.Array, axes: Axes) -> jax.Array:
+    """``with_sharding_constraint`` under the active context; identity if none."""
+    if _CTX.mesh is None:
+        return x
+    spec = logical_to_spec(axes, x.shape, _CTX.mesh, _CTX.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_flash_attention(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        chunk: Optional[int] = None) -> jax.Array:
+    """q: (B,Hq,S,d); k/v: (B,Hkv,S,d). Full softmax attention."""
+    B, Hq, S, d = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= (qp - kp) < window
+    if chunk is not None:
+        ok &= (qp // chunk) == (kp // chunk)
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ref_decode_attention(q, k, v, pos, *, window: Optional[int] = None,
+                         chunk: Optional[int] = None) -> jax.Array:
+    """q: (B,Hq,d); k/v: (B,Hkv,C,d) ring buffers; pos: (B,)."""
+    B, Hq, d = q.shape
+    _, Hkv, C, _ = k.shape
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhd,bhcd->bhc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    j = jnp.arange(C)[None, :]
+    p = pos[:, None].astype(jnp.int32)
+    pslot = p - jnp.mod(p - j, C)
+    ok = pslot >= 0
+    if window is not None:
+        ok &= (p - pslot) < window
+    if chunk is not None:
+        ok &= (pslot // chunk) == (p // chunk)
+    s = jnp.where(ok[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhc,bhcd->bhd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ref_wkv(r, k, v, w, u):
+    """Naive WKV scan. r/k/v/w: (B,H,S,hd); u: (H,hd)."""
+    B, H, S, hd = r.shape
+
+    def step(s, ts):
+        rt, kt, vt, wt = ts
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt,
+                       s + u[None, :, :, None].astype(jnp.float32) * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    xs = tuple(t.swapaxes(0, 2).swapaxes(1, 2).astype(jnp.float32)
+               for t in (r, k, v, w))  # (S,B,H,hd)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    y = ys.swapaxes(1, 0).swapaxes(1, 2)  # back to (B,H,S,hd)
+    return y.astype(r.dtype), s_final
+
+
+def ref_rmsnorm(x, gain, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gain

@@ -1,0 +1,86 @@
+"""RWKV6 WKV recurrence Pallas TPU kernel.
+
+The per-head recurrent state S (hd_k x hd_v, fp32) lives in VMEM scratch and
+is carried across the time-chunk grid dimension (innermost, "arbitrary"),
+so HBM traffic is exactly one pass over r/k/v/w plus one y write — the
+memory-optimal schedule for an attention-free layer. Inside the kernel each
+chunk runs a ``fori_loop`` of rank-1 state updates:
+
+    y_t = r_t (S + u * k_t^T v_t);   S <- diag(w_t) S + k_t^T v_t
+
+Grid = (B, H, n_chunks); hd is 64 for rwkv6-7b, so the (64, 64) state tile
+is sublane/lane aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_final_ref,
+                state_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    u = u_ref[0].astype(jnp.float32)                      # (hd,)
+
+    def step(t, _):
+        rt = r_ref[0, 0, t].astype(jnp.float32)           # (hd,)
+        kt = k_ref[0, 0, t].astype(jnp.float32)
+        vt = v_ref[0, 0, t].astype(jnp.float32)
+        wt = w_ref[0, 0, t].astype(jnp.float32)
+        s = state_ref[...]                                # (hd, hd) fp32
+        kv = kt[:, None] * vt[None, :]                    # rank-1 outer
+        y = jnp.einsum("i,ij->j", rt, s + u[:, None] * kv)
+        state_ref[...] = wt[:, None] * s + kv
+        o_ref[0, 0, t] = y.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        s_final_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+        u: jax.Array, *, chunk: int = 64, interpret: bool = False):
+    """r/k/v/w: (B, H, S, hd); u: (H, hd). Returns (y (B,H,S,hd), s (B,H,hd,hd))."""
+    B, H, S, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hd), r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, s_final

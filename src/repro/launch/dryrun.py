@@ -1,0 +1,369 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, and extract the roofline terms from the compiled
+artifact (DESIGN §5, EXPERIMENTS §Dry-run).
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+XLA_FLAGS line above executes before any other import so the host platform
+exposes 512 placeholder devices.
+
+Per cell this prints/records:
+  * memory_analysis  — bytes per device (proves the config fits),
+  * cost_analysis    — HLO FLOPs / bytes accessed,
+  * collective bytes — parsed from the optimized HLO module text,
+  * roofline terms   — compute / memory / collective seconds on TPU v5e
+                       constants (197 bf16 TFLOP/s, 819 GB/s HBM,
+                       ~50 GB/s/link ICI).
+"""
+import argparse
+import json
+import re
+import time
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import (
+    ARCH_IDS,
+    SHAPES,
+    get_config,
+    input_axes,
+    input_specs,
+    shape_applicable,
+)
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (
+    expert_parallel_rules,
+    multi_pod_rules,
+    serve_rules,
+    sharding_context,
+    single_pod_rules,
+    tree_shardings,
+)
+
+def _kvq(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, kv_quant=True)
+
+
+def _dots(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, remat="dots")
+
+
+# variant -> (rules transform, cfg transform)
+RULE_VARIANTS = {
+    "baseline": (lambda r: r, lambda c: c),
+    "ep": (expert_parallel_rules, lambda c: c),     # §Perf: expert parallel
+    "serve": (serve_rules, lambda c: c),            # §Perf: decode TP + EP
+    "kvq": (lambda r: r, _kvq),                     # §Perf: int8 KV cache
+    "serve_kvq": (serve_rules, _kvq),
+    "dots": (lambda r: r, _dots),                   # §Perf: remat policy
+}
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import abstract_init
+from repro.models.model import decode_step, init_model, prefill_step
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (per chip, one direction)
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the optimized HLO.
+
+    This counts the *per-device output* of each collective — a conservative
+    proxy for link traffic (ring all-gather moves ~(n-1)/n of the output per
+    device; reduce ops move ~2x operand for ring reduce-scatter+gather).
+    """
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_txt, op = m.group(1), m.group(2)
+        out[op] = out.get(op, 0) + _shape_bytes(shape_txt)
+    return out
+
+
+def _opt_axes(params_axes):
+    return {"step": (), "mu": params_axes, "nu": params_axes}
+
+
+def _lower_cell(cfg: ModelConfig, shape, mesh, rules):
+    """jit + lower + compile one cell's step function on a mesh."""
+    params_abs, params_axes = abstract_init(init_model, cfg)
+    batch_abs = input_specs(cfg, shape)
+    batch_axes = input_axes(cfg, shape)
+    p_sh = tree_shardings(params_axes, params_abs, mesh, rules)
+    b_sh = tree_shardings(batch_axes, batch_abs, mesh, rules)
+    with sharding_context(mesh, rules):
+        if shape.kind == "train":
+            opt_abs = jax.eval_shape(init_opt_state, params_abs)
+            o_sh = tree_shardings(_opt_axes(params_axes), opt_abs, mesh,
+                                  rules)
+            step = make_train_step(cfg, AdamWConfig())
+            lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh)).lower(
+                params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            def pf(params, batch):
+                return prefill_step(cfg, params, batch)
+            lowered = jax.jit(pf, in_shardings=(p_sh, b_sh)).lower(
+                params_abs, batch_abs)
+        else:
+            def dec(params, tokens, cache):
+                return decode_step(cfg, params, tokens, cache)
+            lowered = jax.jit(dec, in_shardings=(
+                p_sh, b_sh["tokens"], b_sh["cache"])).lower(
+                params_abs, batch_abs["tokens"], batch_abs["cache"])
+        return lowered.compile()
+
+
+def _probe_cfg(cfg: ModelConfig, n_super: int) -> ModelConfig:
+    import dataclasses
+    k = cfg.moe.interleave if cfg.moe else 1
+    return dataclasses.replace(
+        cfg, n_layers=n_super * k,
+        n_encoder_layers=(n_super if cfg.is_encdec else 0),
+        unroll=True)
+
+
+def _probe_costs(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis() or {}
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(sum(collective_bytes(compiled.as_text()).values())),
+    }
+
+
+def analytic_hbm_bytes(cfg: ModelConfig, shape, n_chips: int) -> float:
+    """First-order per-chip HBM traffic model (roofline memory term).
+
+    XLA's "bytes accessed" counts every operand of every HLO op — on TPU
+    most of that stays in VMEM/registers after fusion, so it wildly
+    over-counts HBM traffic (reported separately as an upper bound). This
+    model counts the unavoidable streams: weights (with optimizer state for
+    train), boundary activations (with remat), KV-cache reads/writes.
+    """
+    P = float(cfg.param_count())
+    B, S = shape.global_batch, shape.seq_len
+    D, L = cfg.d_model, cfg.n_layers
+    dt = 2.0  # bf16
+    kvd = cfg.n_kv_heads * cfg.head_dim_
+    from repro.configs.shapes import effective_cache_len
+    C = effective_cache_len(cfg, S)
+    if shape.kind == "train":
+        tokens = B * S
+        # fwd read + bwd read + param write (bf16) ; grads + m + v in fp32
+        weights = P * (3 * dt + 3 * 4.0)
+        # remat=block: save x at each layer boundary (write + bwd read) and
+        # recompute intermediates (~2 more tensor streams per layer)
+        acts = tokens * D * L * dt * 4.0
+        kv = 0.0
+    elif shape.kind == "prefill":
+        tokens = B * S
+        weights = P * dt
+        acts = tokens * D * L * dt * 2.0
+        kv = L * B * C * kvd * 2 * dt            # cache writes
+    else:  # decode: stream all weights + read the whole cache each step
+        tokens = B
+        weights = P * dt
+        acts = tokens * D * L * dt * 4.0
+        kv_elt = 1.0 if cfg.kv_quant else dt     # int8 cache halves traffic
+        kv = L * B * C * kvd * 2 * kv_elt
+        if cfg.kv_quant:
+            kv += L * B * C * cfg.n_kv_heads * 2 * dt   # scales
+        if cfg.family in ("ssm", "hybrid") and cfg.ssm:
+            kv += L * B * cfg.n_ssm_heads * cfg.ssm.head_dim \
+                * cfg.ssm.state_size * 4.0 * 2   # fp32 state read+write
+    return (weights + acts + kv) / n_chips
+
+
+def _ssm_recurrence_flops(cfg: ModelConfig, shape) -> float:
+    """Analytic per-token recurrence FLOPs that scan-bodies hide (global)."""
+    if cfg.family not in ("ssm", "hybrid"):
+        return 0.0
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    H, hd = cfg.n_ssm_heads, cfg.ssm.head_dim
+    inner = hd * hd if cfg.family == "ssm" else hd * cfg.ssm.state_size
+    per_tok = cfg.n_layers * H * 8 * inner
+    mult = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd
+    return tokens * per_tok * mult
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                variant: str = "baseline",
+                mesh_shape: Optional[tuple] = None,
+                verbose: bool = True) -> Dict:
+    cfg: ModelConfig = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = shape_applicable(cfg, shape)
+    cell = {"arch": arch, "shape": shape_name, "variant": variant,
+            "mesh": "2x16x16" if multi_pod else
+            ("x".join(map(str, mesh_shape)) if mesh_shape else "16x16")}
+    if skip:
+        cell["skipped"] = skip
+        return cell
+
+    if mesh_shape is not None:
+        assert not multi_pod
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    rules_fn, cfg_fn = RULE_VARIANTS[variant]
+    rules = rules_fn(multi_pod_rules() if multi_pod else single_pod_rules())
+    cfg = cfg_fn(cfg)
+    n_chips = 512 if multi_pod else 256
+
+    # 1) full-depth compile (lax.scan over layers): validates the sharding,
+    #    gives memory_analysis and the collective schedule
+    t0 = time.time()
+    compiled = _lower_cell(cfg, shape, mesh, rules)
+    cell["compile_s"] = round(time.time() - t0, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                cell[attr] = int(v)
+    cell["collectives"] = collective_bytes(compiled.as_text())
+
+    # 2) cost probes: XLA cost_analysis counts a while-loop body once, so
+    #    per-(super)layer cost is measured from two small UNROLLED models
+    #    (2 and 4 super-layers: depth-1 models fuse anomalously) and
+    #    extrapolated: per = (c4-c2)/2 >= 0; total = c2 + (L/k-2)*per
+    k = cfg.moe.interleave if cfg.moe else 1
+    L = cfg.n_layers
+    t0 = time.time()
+    c2p = _probe_costs(_lower_cell(_probe_cfg(cfg, 2), shape, mesh, rules))
+    c4p = _probe_costs(_lower_cell(_probe_cfg(cfg, 4), shape, mesh, rules))
+    cell["probe_compile_s"] = round(time.time() - t0, 1)
+    n_extra = (L / k) - 2
+
+    def extra(key):
+        per = max((c4p[key] - c2p[key]) / 2.0, 0.0)
+        return c2p[key] + n_extra * per
+
+    flops = extra("flops")
+    bytes_acc = extra("bytes")
+    coll_total = extra("coll")
+    # analytic correction for recurrence steps hidden inside SSM scans
+    flops += _ssm_recurrence_flops(cfg, shape) / n_chips
+    cell["hlo_flops"] = flops
+    cell["hlo_bytes"] = bytes_acc          # upper bound on HBM traffic
+    cell["hbm_bytes"] = analytic_hbm_bytes(cfg, shape, n_chips)
+    cell["collective_bytes"] = coll_total
+
+    # Roofline terms. cost_analysis on SPMD modules reports PER-DEVICE
+    # numbers (the module is the per-device program), so divide by per-chip
+    # peaks only; collective bytes are per-device output -> ICI link.
+    # memory term uses the analytic HBM model; the HLO byte figure is kept
+    # as t_memory_upper_s.
+    cell["t_compute_s"] = flops / PEAK_FLOPS
+    cell["t_memory_s"] = cell["hbm_bytes"] / HBM_BW
+    cell["t_memory_upper_s"] = bytes_acc / HBM_BW
+    cell["t_collective_s"] = coll_total / ICI_BW
+    dom = max(("t_compute_s", "t_memory_s", "t_collective_s"),
+              key=lambda k: cell[k])
+    cell["bottleneck"] = dom.replace("t_", "").replace("_s", "")
+
+    # model FLOPs (6ND forward+backward for train; 2ND per token for decode)
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        model_flops = 6 * n_active * B * S
+    elif shape.kind == "prefill":
+        model_flops = 2 * n_active * B * S
+    else:
+        model_flops = 2 * n_active * B  # one token per row
+    cell["model_flops_total"] = float(model_flops)
+    cell["model_flops_per_chip"] = float(model_flops) / n_chips
+    cell["useful_flop_ratio"] = (
+        float(model_flops) / n_chips / flops if flops else 0.0)
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline",
+                    choices=sorted(RULE_VARIANTS))
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override single-pod mesh, e.g. 8x32")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+    mesh_shape = (tuple(int(x) for x in args.mesh_shape.split("x"))
+                  if args.mesh_shape else None)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    cell = dryrun_cell(arch, shape, multi_pod=mp,
+                                       variant=args.variant,
+                                       mesh_shape=mesh_shape)
+                except Exception as e:  # a failure here is a sharding bug
+                    cell = {"arch": arch, "shape": shape,
+                            "mesh": "2x16x16" if mp else "16x16",
+                            "error": f"{type(e).__name__}: {e}"}
+                tag = ("SKIP" if "skipped" in cell
+                       else "FAIL" if "error" in cell else "OK")
+                msg = cell.get("skipped") or cell.get("error") or (
+                    f"flops/dev={cell['hlo_flops']:.3e} "
+                    f"bytes/dev={cell['hlo_bytes']:.3e} "
+                    f"coll={cell['collective_bytes']:.3e} "
+                    f"bottleneck={cell['bottleneck']} "
+                    f"useful={cell['useful_flop_ratio']:.2f} "
+                    f"compile={cell['compile_s']}s")
+                print(f"[{tag}] {arch} x {shape} x {cell['mesh']}: {msg}",
+                      flush=True)
+                results.append(cell)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    n_fail = sum("error" in c for c in results)
+    print(f"\n{len(results)} cells, {n_fail} failures -> {args.out}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: 16x16 = 256 chips (data x model);
+multi-pod: 2x16x16 = 512 chips with a leading "pod" axis (DCI links).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever this host has (tests / examples): (n_devices,) 'data' mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

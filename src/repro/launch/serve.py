@@ -1,0 +1,58 @@
+"""Serving launcher: batched requests through the continuous-batching engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch dcache-agent-150m \
+        --requests 8 --max-new 24
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import ALL_IDS, get_config
+from repro.models.common import Init, unbox
+from repro.models.model import init_model
+from repro.serving.engine import ServingEngine
+
+PROMPTS = [
+    "Plot the xview1 images from 2022 around Newport Beach",
+    "Detect airplanes in this area",
+    "Show fair1m and xview1 imagery from 2022",
+    "Classify the land cover near Houston",
+    "How many ships were detected in Miami in 2021?",
+    "Render a heatmap of detections for Seattle",
+    "What does the Denver area look like?",
+    "Count the cloudy scenes in sentinel2-2020",
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dcache-agent-150m", choices=ALL_IDS)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = dataclasses.replace(cfg.reduced(), vocab_size=512)
+    ini = Init(jax.random.PRNGKey(0), dtype=cfg.jnp_dtype)
+    params, _ = unbox(init_model(ini, cfg))
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
+                        max_len=args.max_len)
+    reqs = [eng.submit(PROMPTS[i % len(PROMPTS)], max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    eng.run_until_done()
+    for r in reqs:
+        print(f"[{r.rid}] {eng.tok.decode(r.prompt_ids)!r} -> "
+              f"{eng.tok.decode(r.out_ids)!r}")
+    print("stats:", eng.stats())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.models.common import Boxed, Init, abstract_init, unbox  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_model,
+    loss_fn,
+    prefill_step,
+)

@@ -1,0 +1,146 @@
+"""Parameter construction with attached logical sharding axes.
+
+Params are built as pytrees of :class:`Boxed` (value + logical axes), then
+split into a value tree and an axes tree. The axes tree feeds
+``repro.distributed.sharding`` to derive NamedShardings on any mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Boxed:
+    value: object          # jax.Array or ShapeDtypeStruct
+    axes: Tuple[str, ...]  # logical axis per dim
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    """(values, axes) trees from a Boxed tree."""
+    vals = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return vals, axes
+
+
+class Init:
+    """Splittable rng + param factory used by all module ``init`` functions."""
+
+    def __init__(self, rng: jax.Array, dtype=jnp.bfloat16, abstract: bool = False):
+        self._rng = rng
+        self.dtype = dtype
+        self.abstract = abstract  # build ShapeDtypeStructs only (dry-run)
+
+    def _next(self) -> jax.Array:
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    def param(self, shape, axes, scale: float = 1.0, mode: str = "normal") -> Boxed:
+        assert len(shape) == len(axes), (shape, axes)
+        if self.abstract:
+            return Boxed(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        if mode == "zeros":
+            v = jnp.zeros(shape, self.dtype)
+        elif mode == "ones":
+            v = jnp.ones(shape, self.dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = scale / np.sqrt(max(fan_in, 1))
+            v = (jax.random.truncated_normal(self._next(), -2.0, 2.0, shape, jnp.float32)
+                 * std).astype(self.dtype)
+        return Boxed(v, tuple(axes))
+
+    def zeros(self, shape, axes) -> Boxed:
+        return self.param(shape, axes, mode="zeros")
+
+    def ones(self, shape, axes) -> Boxed:
+        return self.param(shape, axes, mode="ones")
+
+
+def maybe_scan(body: Callable, carry, xs, unroll: bool = False):
+    """``lax.scan`` or an equivalent python loop (see ModelConfig.unroll)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def abstract_init(init_fn: Callable, cfg) -> Tuple[object, object]:
+    """(ShapeDtypeStruct params, axes) without allocating anything."""
+    ini = Init(jax.random.PRNGKey(0), dtype=cfg.jnp_dtype, abstract=True)
+    return unbox(init_fn(ini, cfg))
+
+
+# ---------------------------------------------------------------------------
+# Numerics shared by all model families
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def grad_cast(x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """Identity forward; casts the COTANGENT to ``dtype`` in backward.
+
+    The fp32 loss head otherwise makes the residual-stream cotangent fp32
+    through every layer, doubling the bytes of every TP all-reduce /
+    all-gather of activation gradients (EXPERIMENTS §Perf, mixtral it.2)."""
+    return x
+
+
+def _grad_cast_fwd(x, dtype):
+    return x, None
+
+
+def _grad_cast_bwd(dtype, _, g):
+    return (g.astype(dtype),)
+
+
+grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def swiglu(x_gate: jax.Array, x_up: jax.Array) -> jax.Array:
+    # computed in the input dtype: an f32 cast here makes the BACKWARD
+    # gradients (incl. the MoE dL/dxe all-reduce across the model axis)
+    # fp32, doubling the dominant collective bytes (EXPERIMENTS §Perf it.2)
+    return jax.nn.silu(x_gate) * x_up
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)

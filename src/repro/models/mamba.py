@@ -1,0 +1,131 @@
+"""Mamba-style selective-SSM heads for the hybrid (hymba) family.
+
+Hymba runs attention heads and SSM heads *in parallel* inside each layer
+(arXiv:2411.13676); this module provides the SSM half. Per head of dim
+``hd`` with state width ``N``:
+
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * (z_t  (x)  B_t)
+    y_t = S_t @ C_t + D_h * z_t
+
+with data-dependent dt (softplus), B, C, a short causal conv on the input,
+and a chunked scan (checkpointed inner loop) like the RWKV path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Init
+
+SSM_CHUNK = 64
+
+
+def init_mamba(ini: Init, cfg: ModelConfig, n_layers: int) -> Dict:
+    d = cfg.d_model
+    H, hd, N = cfg.n_ssm_heads, cfg.ssm.head_dim, cfg.ssm.state_size
+    cw = max(cfg.ssm.conv_width, 1)
+    L = (n_layers,)
+    return {
+        "w_in": ini.param(L + (d, H * hd), ("layers", "embed", "ssm_dim")),
+        "w_dt": ini.param(L + (d, H), ("layers", "embed", "")),
+        "b_dt": ini.zeros(L + (H,), ("layers", "")),
+        "w_B": ini.param(L + (d, H * N), ("layers", "embed", "")),
+        "w_C": ini.param(L + (d, H * N), ("layers", "embed", "")),
+        "a_log": ini.zeros(L + (H,), ("layers", "")),       # A = -exp(a_log)
+        "d_skip": ini.ones(L + (H,), ("layers", "")),
+        "conv": ini.param(L + (cw, H * hd), ("layers", "conv", "ssm_dim"),
+                          scale=0.5),
+        "w_out": ini.param(L + (H * hd, d), ("layers", "ssm_dim", "embed"),
+                           scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def _conv1d(z: jax.Array, w: jax.Array, carry: jax.Array = None):
+    """Causal depthwise conv. z: (B,S,C); w: (cw,C); carry: (B,cw-1,C)."""
+    cw = w.shape[0]
+    if cw == 1:
+        return z * w[0], None
+    if carry is None:
+        carry = jnp.zeros((z.shape[0], cw - 1, z.shape[2]), z.dtype)
+    zp = jnp.concatenate([carry, z], axis=1)
+    out = sum(zp[:, i:i + z.shape[1], :] * w[i] for i in range(cw))
+    return out, zp[:, -(cw - 1):, :]
+
+
+def _ssm_inputs(p: Dict, cfg: ModelConfig, x: jax.Array, conv_carry=None):
+    H, hd, N = cfg.n_ssm_heads, cfg.ssm.head_dim, cfg.ssm.state_size
+    B, S, _ = x.shape
+    z = x @ p["w_in"]
+    z, conv_carry = _conv1d(z, p["conv"], conv_carry)
+    z = jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype).reshape(B, S, H, hd)
+    dt = jax.nn.softplus((x @ p["w_dt"] + p["b_dt"]).astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (H,)
+    decay = jnp.exp(dt * a)                                  # (B,S,H)
+    Bt = (x @ p["w_B"]).reshape(B, S, H, N)
+    Ct = (x @ p["w_C"]).reshape(B, S, H, N)
+    return z, dt, decay, Bt, Ct, conv_carry
+
+
+def ssm_scan(z, dt, decay, Bt, Ct, s0, chunk: int = SSM_CHUNK):
+    """z: (B,S,H,hd); dt/decay: (B,S,H); Bt/Ct: (B,S,H,N); s0: (B,H,hd,N)."""
+    B, S, H, hd = z.shape
+    c = chunk if S % chunk == 0 else S
+    n = S // c
+
+    def to_chunks(x):
+        return x.reshape((B, n, c) + x.shape[2:]).swapaxes(0, 1).swapaxes(1, 2)
+
+    zc, dtc, dc, Bc, Cc = map(to_chunks, (z, dt, decay, Bt, Ct))
+
+    @jax.checkpoint
+    def chunk_body(s, xs):
+        zz, dd, de, bb, cc = xs
+
+        def step(s_in, ts):
+            zt, dtt, det, bt, ct = ts
+            upd = jnp.einsum("bhi,bhn->bhin", (zt * dtt[..., None]).astype(jnp.float32),
+                             bt.astype(jnp.float32))
+            s_out = det.astype(jnp.float32)[..., None, None] * s_in + upd
+            yt = jnp.einsum("bhin,bhn->bhi", s_out, ct.astype(jnp.float32))
+            return s_out, yt
+
+        s, ys = jax.lax.scan(step, s, (zz, dd, de, bb, cc))
+        return s, ys
+
+    s_final, yc = jax.lax.scan(chunk_body, s0.astype(jnp.float32),
+                               (zc, dtc, dc, Bc, Cc))
+    y = yc.swapaxes(1, 2).swapaxes(0, 1).reshape(B, S, H, hd)
+    return y.astype(z.dtype), s_final
+
+
+def mamba_mix(p: Dict, cfg: ModelConfig, x: jax.Array, state: jax.Array):
+    """Full-sequence SSM heads. x: (B,S,D); state: (B,H,hd,N) fp32.
+    Returns (out, s_final, conv_carry)."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_ssm_heads, cfg.ssm.head_dim
+    z, dt, decay, Bt, Ct, conv_carry = _ssm_inputs(p, cfg, x)
+    y, s_final = ssm_scan(z, dt, decay, Bt, Ct, state,
+                          chunk=(S if cfg.unroll else SSM_CHUNK))
+    y = y + p["d_skip"][None, None, :, None].astype(y.dtype) * z
+    out = y.reshape(B, S, H * hd) @ p["w_out"]
+    return out, s_final, conv_carry
+
+
+def mamba_step(p: Dict, cfg: ModelConfig, x: jax.Array, state: jax.Array,
+               conv_carry: jax.Array):
+    """Single-token decode. x: (B,1,D); state: (B,H,hd,N) fp32;
+    conv_carry: (B,cw-1,H*hd). Returns (out, state', conv_carry')."""
+    B = x.shape[0]
+    H, hd = cfg.n_ssm_heads, cfg.ssm.head_dim
+    z, dt, decay, Bt, Ct, conv_carry = _ssm_inputs(p, cfg, x, conv_carry)
+    zt, dtt, det, bt, ct = z[:, 0], dt[:, 0], decay[:, 0], Bt[:, 0], Ct[:, 0]
+    upd = jnp.einsum("bhi,bhn->bhin", (zt * dtt[..., None]).astype(jnp.float32),
+                     bt.astype(jnp.float32))
+    state = det.astype(jnp.float32)[..., None, None] * state + upd
+    yt = jnp.einsum("bhin,bhn->bhi", state, ct.astype(jnp.float32)).astype(x.dtype)
+    yt = yt + p["d_skip"][None, :, None].astype(yt.dtype) * zt
+    out = yt.reshape(B, 1, H * hd) @ p["w_out"]
+    return out, state, conv_carry

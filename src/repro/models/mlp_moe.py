@@ -1,0 +1,145 @@
+"""Dense FFN (SwiGLU / GELU) and Mixture-of-Experts blocks.
+
+MoE uses the GShard/mesh-tf *capacity-based dense dispatch* — the TPU-native
+formulation: tokens are folded into groups, a (group, token, expert,
+capacity) dispatch tensor routes top-k tokens into per-expert buffers, and
+expert FFNs run as one batched einsum over (expert, capacity) — so compiled
+FLOPs scale with top-k (active experts), not n_experts. Ragged/sorted
+dispatch is a GPU-ism; the MXU wants the dense batched matmul.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import Init, gelu, swiglu
+
+CAPACITY_FACTOR = 1.25
+GROUP_TOKENS = 1024
+
+
+def init_mlp(ini: Init, cfg: ModelConfig, n_layers: int) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    L = (n_layers,)
+    p = {
+        "w_up": ini.param(L + (d, f), ("layers", "embed", "mlp")),
+        "w_down": ini.param(L + (f, d), ("layers", "mlp", "embed"),
+                            scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+    }
+    if cfg.act == "swiglu":
+        p["w_gate"] = ini.param(L + (d, f), ("layers", "embed", "mlp"))
+    return p
+
+
+def mlp(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    up = constrain(up, ("batch", "seq", "act_mlp"))
+    if cfg.act == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = swiglu(gate, up)
+    else:
+        h = gelu(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def init_moe(ini: Init, cfg: ModelConfig, n_layers: int) -> Dict:
+    assert cfg.moe is not None
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    L = (n_layers,)
+    p = {
+        "router": ini.param(L + (d, e), ("layers", "embed", "experts")),
+        "we_gate": ini.param(L + (e, d, f), ("layers", "experts", "embed", "mlp")),
+        "we_up": ini.param(L + (e, d, f), ("layers", "experts", "embed", "mlp")),
+        "we_down": ini.param(L + (e, f, d), ("layers", "experts", "mlp", "embed"),
+                             scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+    }
+    if cfg.moe.n_shared_experts:
+        s = cfg.moe.n_shared_experts
+        p["ws_gate"] = ini.param(L + (d, s * f), ("layers", "embed", "mlp"))
+        p["ws_up"] = ini.param(L + (d, s * f), ("layers", "embed", "mlp"))
+        p["ws_down"] = ini.param(L + (s * f, d), ("layers", "mlp", "embed"))
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    mc = cfg.moe
+    # dropless for small groups (decode steps): capacity covers the worst
+    # case so no token is ever dropped at generation time
+    if group_tokens * mc.top_k <= 64:
+        return group_tokens * mc.top_k
+    c = int(group_tokens * mc.top_k * CAPACITY_FACTOR / mc.n_experts)
+    return max(c, mc.top_k)
+
+
+def _routing(p: Dict, cfg: ModelConfig, xg: jax.Array,
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """dispatch/combine tensors (G,T,E,C) from grouped tokens xg (G,T,D)."""
+    mc = cfg.moe
+    G, T, _ = xg.shape
+    E, K = mc.n_experts, mc.top_k
+    C = moe_capacity(cfg, T)
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"]).astype(jnp.float32)
+    gate_vals, idx = jax.lax.top_k(logits, K)              # (G,T,K)
+    gate_vals = jax.nn.softmax(gate_vals, axis=-1)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)     # (G,T,K,E)
+    # position of each (token, k) inside its expert buffer (k=0 has priority)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, K * T, E)
+    pos_flat = (jnp.cumsum(flat, axis=1) - 1.0) * flat
+    pos = pos_flat.reshape(G, K, T, E).transpose(0, 2, 1, 3)  # (G,T,K,E)
+
+    dispatch = jnp.zeros((G, T, E, C), jnp.float32)
+    combine = jnp.zeros((G, T, E, C), jnp.float32)
+    for k in range(K):
+        oh_e = onehot[:, :, k, :]                           # (G,T,E)
+        pos_t = jnp.sum(pos[:, :, k, :] * oh_e, axis=-1)    # (G,T)
+        keep = (jnp.sum(pos[:, :, k, :] * oh_e, axis=-1) < C).astype(jnp.float32)
+        oh_c = jax.nn.one_hot(pos_t, C, dtype=jnp.float32)  # (G,T,C)
+        d_k = jnp.einsum("gte,gtc->gtec", oh_e * keep[..., None], oh_c)
+        dispatch = dispatch + d_k
+        combine = combine + d_k * gate_vals[:, :, k, None, None]
+    return dispatch, combine, logits
+
+
+def moe(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Top-k routed experts, capacity-based dispatch. x: (B,S,D)."""
+    B, S, D = x.shape
+    tokens = B * S
+    T = GROUP_TOKENS if tokens % GROUP_TOKENS == 0 else tokens
+    G = tokens // T
+    xg = x.reshape(G, T, D)
+    dispatch, combine, _ = _routing(p, cfg, xg)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)         # (G,E,C,D)
+    xe = constrain(xe, ("moe_tokens", "experts", "", "act_embed"))
+    h = swiglu(
+        jnp.einsum("gecd,edf->gecf", xe, p["we_gate"]),
+        jnp.einsum("gecd,edf->gecf", xe, p["we_up"]),
+    )
+    h = constrain(h, ("moe_tokens", "experts", "", "act_mlp"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["we_down"])
+    out = jnp.einsum("gecd,gtec->gtd", ye, combine).reshape(B, S, D)
+    if cfg.moe.n_shared_experts:
+        out = out + jnp.einsum(
+            "bsf,fd->bsd",
+            swiglu(jnp.einsum("bsd,df->bsf", x, p["ws_gate"]),
+                   jnp.einsum("bsd,df->bsf", x, p["ws_up"])),
+            p["ws_down"])
+    return out
+
+
+def moe_aux_loss(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Switch-style load-balancing loss."""
+    mc = cfg.moe
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(logits, mc.top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx, mc.n_experts, dtype=jnp.float32),
+                    axis=(0, 1, 2))
+    imp = jnp.mean(probs, axis=(0, 1))
+    return mc.n_experts * jnp.sum(frac * imp)

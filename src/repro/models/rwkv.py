@@ -1,0 +1,169 @@
+"""RWKV6 ("Finch") time-mix and channel-mix — attention-free recurrence with
+data-dependent decay (arXiv:2404.05892).
+
+The WKV recurrence runs as a *chunked* scan: an outer ``lax.scan`` over
+sequence chunks carries the (B,H,K,V) state, the inner per-step scan is
+wrapped in ``jax.checkpoint`` so training memory is O(S/chunk) states, not
+O(S). The Pallas kernel in ``repro.kernels.rwkv_wkv`` is the TPU hot path
+for the same computation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Init, rms_norm
+
+LORA_RANK = 32
+WKV_CHUNK = 64
+
+
+def init_time_mix(ini: Init, cfg: ModelConfig, n_layers: int) -> Dict:
+    d = cfg.d_model
+    H, hd = cfg.n_ssm_heads, cfg.ssm.head_dim
+    r = LORA_RANK
+    L = (n_layers,)
+    p: Dict = {"w0": ini.zeros(L + (d,), ("layers", "embed"))}
+    for name in ("x", "w", "k", "v", "r", "g"):
+        p[f"mu_{name}"] = ini.zeros(L + (d,), ("layers", "embed"))
+    for name in ("w", "k", "v", "r", "g"):
+        p[f"la_{name}"] = ini.param(L + (d, r), ("layers", "embed", "lora"))
+        p[f"lb_{name}"] = ini.param(L + (r, d), ("layers", "lora", "embed"),
+                                    scale=0.1)
+    for name in ("wr", "wk", "wv", "wg"):
+        p[name] = ini.param(L + (d, H * hd), ("layers", "embed", "ssm_dim"))
+    p["wo"] = ini.param(L + (H * hd, d), ("layers", "ssm_dim", "embed"),
+                        scale=1.0 / max(cfg.n_layers, 1) ** 0.5)
+    p["u"] = ini.zeros(L + (H, hd), ("layers", "", ""))
+    p["ln_x"] = ini.ones(L + (H * hd,), ("layers", "ssm_dim"))
+    return p
+
+
+def init_channel_mix(ini: Init, cfg: ModelConfig, n_layers: int) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    L = (n_layers,)
+    return {
+        "mu_k": ini.zeros(L + (d,), ("layers", "embed")),
+        "mu_r": ini.zeros(L + (d,), ("layers", "embed")),
+        "wk": ini.param(L + (d, f), ("layers", "embed", "mlp")),
+        "wv": ini.param(L + (f, d), ("layers", "mlp", "embed"),
+                        scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+        "wr": ini.param(L + (d, d), ("layers", "embed", "act_embed")),
+    }
+
+
+def _ddlerp(x, dx, mu, la, lb):
+    """Data-dependent token-shift interpolation (rwkv6)."""
+    return x + dx * (mu + jnp.tanh((x + dx * mu) @ la) @ lb)
+
+
+def wkv_scan(r, k, v, w, u, s0, chunk: int = WKV_CHUNK,
+             ) -> Tuple[jax.Array, jax.Array]:
+    """WKV recurrence.  r,k,v,w: (B,S,H,hd); u: (H,hd); s0: (B,H,hd,hd) fp32.
+
+    y_t = r_t . (S_{t-1} + u * k_t^T v_t);  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    Returns (y (B,S,H,hd), s_final).
+    """
+    B, S, H, hd = r.shape
+    c = chunk if S % chunk == 0 else S
+    n = S // c
+
+    def to_chunks(x):
+        return x.reshape(B, n, c, H, hd).transpose(1, 2, 0, 3, 4)  # (n,c,B,H,hd)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    @jax.checkpoint
+    def chunk_body(s, xs):
+        rr, kk, vv, ww = xs  # each (c,B,H,hd)
+
+        def step(s_in, ts):
+            rt, kt, vt, wt = ts
+            kvt = jnp.einsum("bhi,bhj->bhij", kt.astype(jnp.float32),
+                             vt.astype(jnp.float32))
+            yt = jnp.einsum("bhi,bhij->bhj", rt.astype(jnp.float32),
+                            s_in + u.astype(jnp.float32)[None, :, :, None] * kvt)
+            s_out = wt.astype(jnp.float32)[..., None] * s_in + kvt
+            return s_out, yt
+
+        s, ys = jax.lax.scan(step, s, (rr, kk, vv, ww))
+        return s, ys
+
+    s_final, yc = jax.lax.scan(chunk_body, s0.astype(jnp.float32),
+                               (rc, kc, vc, wc))
+    y = yc.transpose(2, 0, 1, 3, 4).reshape(B, S, H, hd)
+    return y.astype(r.dtype), s_final
+
+
+def _tm_inputs(p: Dict, x: jax.Array, xx: jax.Array, cfg: ModelConfig):
+    """r,k,v,w,g tensors (B,S,H,hd) from x and its token-shift xx."""
+    H, hd = cfg.n_ssm_heads, cfg.ssm.head_dim
+    dx = xx - x
+    xw = _ddlerp(x, dx, p["mu_w"], p["la_w"], p["lb_w"])
+    xk = _ddlerp(x, dx, p["mu_k"], p["la_k"], p["lb_k"])
+    xv = _ddlerp(x, dx, p["mu_v"], p["la_v"], p["lb_v"])
+    xr = _ddlerp(x, dx, p["mu_r"], p["la_r"], p["lb_r"])
+    xg = _ddlerp(x, dx, p["mu_g"], p["la_g"], p["lb_g"])
+    shp = x.shape[:-1] + (H, hd)
+    r = (xr @ p["wr"]).reshape(shp)
+    k = (xk @ p["wk"]).reshape(shp)
+    v = (xv @ p["wv"]).reshape(shp)
+    g = jax.nn.silu((xg @ p["wg"]).astype(jnp.float32)).astype(x.dtype)
+    # decay in (0,1), data-dependent (the "Finch" contribution)
+    w = jnp.exp(-jnp.exp((jnp.tanh(xw @ p["la_w"]) @ p["lb_w"] + p["w0"]
+                          ).astype(jnp.float32))).reshape(shp)
+    return r, k, v, w.astype(jnp.float32), g
+
+
+def time_mix(p: Dict, cfg: ModelConfig, x: jax.Array, shift: jax.Array,
+             state: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence time-mix. x: (B,S,D); shift: (B,D) last token of the
+    previous segment; state: (B,H,hd,hd) fp32. Returns (out, shift', state')."""
+    B, S, D = x.shape
+    H, hd = cfg.n_ssm_heads, cfg.ssm.head_dim
+    xx = jnp.concatenate([shift[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, w, g = _tm_inputs(p, x, xx, cfg)
+    # unroll mode (cost probes): single chunk; the recurrence flops are
+    # added analytically by the dry-run (see launch/dryrun.py)
+    y, s_final = wkv_scan(r, k, v, w, p["u"], state,
+                          chunk=(S if cfg.unroll else WKV_CHUNK))
+    y = y.reshape(B, S, H * hd)
+    y = rms_norm(y.reshape(B, S, H, hd), jnp.ones((hd,), x.dtype),
+                 cfg.norm_eps).reshape(B, S, H * hd) * p["ln_x"]
+    out = (y * g) @ p["wo"]
+    return out, x[:, -1, :], s_final
+
+
+def time_mix_step(p: Dict, cfg: ModelConfig, x: jax.Array, shift: jax.Array,
+                  state: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode. x: (B,1,D)."""
+    B, _, D = x.shape
+    H, hd = cfg.n_ssm_heads, cfg.ssm.head_dim
+    xx = shift[:, None, :]
+    r, k, v, w, g = _tm_inputs(p, x, xx, cfg)
+    rt, kt, vt, wt = (t[:, 0] for t in (r, k, v, w))
+    kv = jnp.einsum("bhi,bhj->bhij", kt.astype(jnp.float32),
+                    vt.astype(jnp.float32))
+    y = jnp.einsum("bhi,bhij->bhj", rt.astype(jnp.float32),
+                   state + p["u"].astype(jnp.float32)[None, :, :, None] * kv)
+    state = wt.astype(jnp.float32)[..., None] * state + kv
+    y = y[:, None].astype(x.dtype).reshape(B, 1, H, hd)
+    y = rms_norm(y, jnp.ones((hd,), x.dtype), cfg.norm_eps
+                 ).reshape(B, 1, H * hd) * p["ln_x"]
+    out = (y * g.reshape(B, 1, H * hd)) @ p["wo"]
+    return out, x[:, 0, :], state
+
+
+def channel_mix(p: Dict, cfg: ModelConfig, x: jax.Array, shift: jax.Array,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Squared-ReLU channel mix. x: (B,S,D); shift: (B,D)."""
+    xx = jnp.concatenate([shift[:, None, :], x[:, :-1, :]], axis=1)
+    dx = xx - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    k = jnp.square(jax.nn.relu((xk @ p["wk"]).astype(jnp.float32))).astype(x.dtype)
+    return jax.nn.sigmoid((xr @ p["wr"]).astype(jnp.float32)).astype(x.dtype) \
+        * (k @ p["wv"]), x[:, -1, :]

@@ -1,0 +1,3 @@
+from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.sampler import sample  # noqa: F401
+from repro.serving.tokenizer import ByteTokenizer  # noqa: F401

@@ -1,0 +1,191 @@
+"""Continuous-batching serving engine.
+
+Slot-based scheduler over the unified model's (prefill_step, decode_step):
+a fixed decode batch of ``max_batch`` slots steps in lockstep (one jitted
+decode per engine step); requests are admitted into free slots by running a
+single-row prefill (prompt bucketed to a power of two to bound recompiles —
+right-padding is masked by construction, see ``prefill_step``) and
+scattering the row into the batch cache. Completed rows free their slot.
+
+This is the vLLM-style core scaled down: the KV "pages" are per-slot ring
+buffers; at production scale the same engine runs under pjit with the cache
+sharded (batch -> data, kv -> model) — exactly what the decode dry-run
+shapes lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import cache_specs, effective_cache_len
+from repro.models.model import decode_step, prefill_step
+from repro.serving.sampler import sample
+from repro.serving.tokenizer import MIN_VOCAB, ByteTokenizer
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_ids: List[int]
+    max_new_tokens: int
+    temperature: float = 0.0
+    out_ids: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+def _bucket(n: int, cap: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_len: int = 512, tokenizer: Optional[ByteTokenizer] = None):
+        assert cfg.vocab_size >= MIN_VOCAB, "byte tokenizer needs vocab>=258"
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.tok = tokenizer or ByteTokenizer()
+        self.cache = self._empty_cache()
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.waiting: List[Request] = []
+        self.finished: List[Request] = []
+        self._rid = 0
+        self._rng = jax.random.PRNGKey(0)
+        self._decode = jax.jit(functools.partial(decode_step, cfg))
+        self._prefill = {}
+        self.steps = 0
+
+    # -- cache plumbing -------------------------------------------------------
+    def _empty_cache(self):
+        specs = cache_specs(self.cfg, self.max_batch, self.max_len)
+        return {k: jnp.zeros(v.shape, v.dtype) for k, v in specs.items()}
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill:
+            self._prefill[bucket] = jax.jit(functools.partial(
+                prefill_step, self.cfg, max_len=self.max_len))
+        return self._prefill[bucket]
+
+    def _install(self, slot: int, row_cache: Dict):
+        """Scatter a B=1 prefill cache into slot b of the batch cache."""
+        C = effective_cache_len(self.cfg, self.max_len)
+        for k, v in row_cache.items():
+            cur = self.cache[k]
+            if k == "pos":
+                self.cache[k] = cur.at[slot].set(v[0])
+            elif cur.ndim >= 3 and cur.shape[1] == self.max_batch:
+                # (L, B, ...) layer-stacked
+                row = v[:, 0]
+                if k in ("k", "v"):
+                    rc = row.shape[1]
+                    if rc < C:
+                        pad = jnp.zeros((row.shape[0], C - rc, row.shape[2]),
+                                        row.dtype)
+                        row = jnp.concatenate([row, pad], axis=1)
+                    else:
+                        row = row[:, :C]
+                self.cache[k] = cur.at[:, slot].set(row)
+            else:
+                self.cache[k] = cur.at[slot].set(v[0])
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, prompt: str, max_new_tokens: int = 32,
+               temperature: float = 0.0) -> Request:
+        ids = self.tok.encode(prompt)[- (self.max_len // 2):]
+        req = Request(rid=self._rid, prompt_ids=ids,
+                      max_new_tokens=max_new_tokens, temperature=temperature,
+                      submitted_at=time.perf_counter())
+        self._rid += 1
+        self.waiting.append(req)
+        return req
+
+    def _admit(self):
+        exact = self.cfg.family in ("ssm", "hybrid")  # recurrent state: no pad
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.waiting:
+                continue
+            req = self.waiting.pop(0)
+            n = len(req.prompt_ids)
+            bucket = n if exact else _bucket(n, self.max_len)
+            ids = req.prompt_ids + [0] * (bucket - n)
+            batch = {"tokens": jnp.asarray([ids], jnp.int32)}
+            row_cache, logits = self._prefill_fn(bucket)(
+                self.params, batch,
+                true_lens=jnp.asarray([n], jnp.int32))
+            self._install(slot, row_cache)
+            self._rng, k = jax.random.split(self._rng)
+            tok = sample(logits[:, -1].astype(jnp.float32), k,
+                         temperature=req.temperature)
+            req.out_ids.append(int(tok[0]))
+            req.first_token_at = time.perf_counter()
+            self.slots[slot] = req
+
+    def step(self) -> int:
+        """One engine step: admit waiting requests, decode all active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].out_ids[-1]
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(tokens), self.cache)
+        self._rng, k = jax.random.split(self._rng)
+        nxt = np.asarray(sample(logits[:, -1].astype(jnp.float32), k))
+        self.steps += 1
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt[i])
+            req.out_ids.append(tok)
+            limit_hit = len(req.out_ids) >= req.max_new_tokens
+            pos_cap = int(self.cache["pos"][i]) >= self.max_len - 1
+            if tok == self.tok.eos_id or limit_hit or pos_cap:
+                req.done = True
+                req.finished_at = time.perf_counter()
+                self.finished.append(req)
+                self.slots[i] = None
+        return len(active)
+
+    def run_until_done(self, max_steps: int = 10_000):
+        while (self.waiting or any(s is not None for s in self.slots)) \
+                and max_steps > 0:
+            self.step()
+            max_steps -= 1
+
+    def generate_text(self, prompt: str, max_new_tokens: int = 32,
+                      temperature: float = 0.0) -> str:
+        req = self.submit(prompt, max_new_tokens, temperature)
+        self.run_until_done()
+        return self.tok.decode(req.out_ids)
+
+    # -- metrics ---------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        done = self.finished
+        if not done:
+            return {"finished": 0}
+        ttft = [r.first_token_at - r.submitted_at for r in done
+                if r.first_token_at]
+        lat = [r.finished_at - r.submitted_at for r in done if r.finished_at]
+        toks = sum(len(r.out_ids) for r in done)
+        wall = max(r.finished_at for r in done) - min(
+            r.submitted_at for r in done)
+        return {"finished": len(done),
+                "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+                "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+                "tokens": toks,
+                "throughput_tok_s": toks / wall if wall > 0 else 0.0}

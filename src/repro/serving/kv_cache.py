@@ -1,0 +1,197 @@
+"""Paged KV cache (vLLM-style, TPU-adapted).
+
+Physical storage is a pool of fixed-size pages per layer,
+``(n_pages, page_size, kv_dim)``; each sequence owns a growable list of
+pages recorded in a page table. Attention gathers the sequence's pages into
+a contiguous view (``jnp.take`` — on TPU this lowers to dynamic-gather; the
+Pallas decode kernel can consume the gathered view directly). Compared with
+the engine's per-slot ring buffers, paging removes per-slot max-length
+reservation: memory scales with *tokens in flight*, not slots x max_len.
+
+Host-side allocator (free list, ref-counted pages for prefix sharing) +
+device-side gather/scatter helpers, both tested in ``tests/test_paged_kv``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class PagedCacheConfig:
+    n_layers: int
+    kv_dim: int                 # n_kv_heads * head_dim
+    page_size: int = 16         # tokens per page
+    n_pages: int = 256          # physical pages per layer
+    dtype: str = "bfloat16"
+
+
+class PageAllocator:
+    """Host-side free-list allocator with ref counting (prefix sharing)."""
+
+    def __init__(self, n_pages: int):
+        self.free: List[int] = list(range(n_pages - 1, -1, -1))
+        self.refs: Dict[int, int] = {}
+
+    def alloc(self) -> int:
+        if not self.free:
+            raise OutOfPages("no free KV pages")
+        p = self.free.pop()
+        self.refs[p] = 1
+        return p
+
+    def share(self, page: int):
+        self.refs[page] += 1
+
+    def release(self, page: int):
+        self.refs[page] -= 1
+        if self.refs[page] == 0:
+            del self.refs[page]
+            self.free.append(page)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+
+@dataclasses.dataclass
+class SequenceState:
+    sid: int
+    length: int = 0
+    pages: List[int] = dataclasses.field(default_factory=list)
+
+
+class PagedKVCache:
+    """Paged K/V storage for all layers + per-sequence page tables."""
+
+    def __init__(self, cfg: PagedCacheConfig):
+        self.cfg = cfg
+        dt = jnp.dtype(cfg.dtype)
+        shape = (cfg.n_layers, cfg.n_pages, cfg.page_size, cfg.kv_dim)
+        self.k = jnp.zeros(shape, dt)
+        self.v = jnp.zeros(shape, dt)
+        self.alloc = PageAllocator(cfg.n_pages)
+        self.seqs: Dict[int, SequenceState] = {}
+        self._next_sid = 0
+
+    # -- sequence lifecycle ---------------------------------------------------
+    def new_seq(self) -> int:
+        sid = self._next_sid
+        self._next_sid += 1
+        self.seqs[sid] = SequenceState(sid)
+        return sid
+
+    def free_seq(self, sid: int):
+        for p in self.seqs[sid].pages:
+            self.alloc.release(p)
+        del self.seqs[sid]
+
+    def fork_seq(self, sid: int) -> int:
+        """Prefix sharing: new sequence sharing all full pages (copy-on-...
+        -append: the last partial page is copied, not shared)."""
+        src = self.seqs[sid]
+        new = self.new_seq()
+        dst = self.seqs[new]
+        full = src.length // self.cfg.page_size
+        for p in src.pages[:full]:
+            self.alloc.share(p)
+            dst.pages.append(p)
+        dst.length = full * self.cfg.page_size
+        if src.length > dst.length:  # copy the partial tail
+            tail = src.pages[full]
+            cp = self.alloc.alloc()
+            self.k = self.k.at[:, cp].set(self.k[:, tail])
+            self.v = self.v.at[:, cp].set(self.v[:, tail])
+            dst.pages.append(cp)
+            dst.length = src.length
+        return new
+
+    # -- write ------------------------------------------------------------
+    def append(self, sid: int, k_tok: jax.Array, v_tok: jax.Array):
+        """Append one token's K/V. k_tok/v_tok: (n_layers, kv_dim)."""
+        s = self.seqs[sid]
+        ps = self.cfg.page_size
+        if s.length % ps == 0:
+            s.pages.append(self.alloc.alloc())
+        page = s.pages[-1]
+        off = s.length % ps
+        self.k = self.k.at[:, page, off].set(k_tok)
+        self.v = self.v.at[:, page, off].set(v_tok)
+        s.length += 1
+
+    def write_prompt(self, sid: int, k_seq: jax.Array, v_seq: jax.Array):
+        """Bulk prefill write. k_seq/v_seq: (n_layers, S, kv_dim)."""
+        S = k_seq.shape[1]
+        s = self.seqs[sid]
+        assert s.length == 0, "write_prompt on a non-empty sequence"
+        ps = self.cfg.page_size
+        n_pages = (S + ps - 1) // ps
+        pad = n_pages * ps - S
+        if pad:
+            z = jnp.zeros((k_seq.shape[0], pad, k_seq.shape[2]), k_seq.dtype)
+            k_seq = jnp.concatenate([k_seq, z], axis=1)
+            v_seq = jnp.concatenate([v_seq, z], axis=1)
+        kp = k_seq.reshape(k_seq.shape[0], n_pages, ps, -1)
+        vp = v_seq.reshape(v_seq.shape[0], n_pages, ps, -1)
+        for i in range(n_pages):
+            page = self.alloc.alloc()
+            s.pages.append(page)
+            self.k = self.k.at[:, page].set(kp[:, i])
+            self.v = self.v.at[:, page].set(vp[:, i])
+        s.length = S
+
+    # -- read ------------------------------------------------------------
+    def page_table(self, sids: List[int], max_pages: Optional[int] = None
+                   ) -> np.ndarray:
+        """(B, max_pages) int32 table, padded with page 0 (masked by len)."""
+        mp = max_pages or max(len(self.seqs[s].pages) for s in sids)
+        t = np.zeros((len(sids), mp), np.int32)
+        for i, sid in enumerate(sids):
+            pg = self.seqs[sid].pages
+            t[i, :len(pg)] = pg
+        return t
+
+    def gather(self, sids: List[int]):
+        """Contiguous (B, C, kv_dim) views per layer via page-table gather.
+        C = max_pages*page_size; positions beyond each seq length are junk
+        and must be masked by the caller (lengths returned)."""
+        table = jnp.asarray(self.page_table(sids))          # (B, P)
+        k = jnp.take(self.k, table, axis=1)                 # (L, B, P, ps, D)
+        v = jnp.take(self.v, table, axis=1)
+        L, B, P, ps, D = k.shape
+        lengths = jnp.asarray([self.seqs[s].length for s in sids], jnp.int32)
+        return (k.reshape(L, B, P * ps, D), v.reshape(L, B, P * ps, D),
+                lengths)
+
+    # -- stats -------------------------------------------------------------
+    def utilization(self) -> float:
+        used = self.cfg.n_pages - self.alloc.n_free
+        return used / self.cfg.n_pages
+
+
+def paged_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           lengths: jax.Array, n_kv_heads: int,
+                           head_dim: int) -> jax.Array:
+    """Reference attention over gathered pages. q: (B, Hq*hd); k/v:
+    (B, C, kv_dim); lengths: (B,). Returns (B, Hq*hd)."""
+    B, C, _ = k.shape
+    kc = k.reshape(B, C, n_kv_heads, head_dim)
+    vc = v.reshape(B, C, n_kv_heads, head_dim)
+    hq = q.shape[-1] // head_dim
+    g = hq // n_kv_heads
+    qh = q.reshape(B, n_kv_heads, g, head_dim)
+    s = jnp.einsum("bkgh,btkh->bkgt", qh.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * (head_dim ** -0.5)
+    mask = jnp.arange(C)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", w, vc.astype(jnp.float32))
+    return o.reshape(B, -1).astype(q.dtype)

@@ -1,0 +1,13 @@
+from repro.training.data import Prefetcher, TokenStream  # noqa: F401
+from repro.training.grad_compress import (  # noqa: F401
+    compress,
+    compress_with_feedback,
+    decompress,
+)
+from repro.training.optimizer import (  # noqa: F401
+    AdamWConfig,
+    adamw_update,
+    init_opt_state,
+    schedule,
+)
+from repro.training.train_loop import TrainLoop, make_train_step  # noqa: F401

@@ -1,0 +1,141 @@
+"""Training loop: jit'd fused train step (loss -> grad -> AdamW), optional
+gradient accumulation, checkpoint/restore hooks, fault-tolerant supervisor.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    accum_steps: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With ``accum_steps > 1`` the batch's leading dim is split and gradients
+    are averaged over microbatches via ``lax.scan`` (activation memory is
+    1/accum of the full batch — the standard microbatching trade)."""
+
+    def grads_of(params, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        return grads, metrics
+
+    def step(params, opt_state, batch):
+        if accum_steps == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                g, m = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, m
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, ms = jax.lax.scan(micro, zero, mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        params, opt_state, opt_m = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(opt_m)
+        return params, opt_state, metrics
+
+    return step
+
+
+class TrainLoop:
+    """Step executor with checkpointing and failure recovery.
+
+    ``failure_injector`` (tests) may raise ``WorkerFailure`` inside a step;
+    the loop restores the last checkpoint and repeats the step — the
+    single-process analogue of a coordinator restarting a failed worker.
+    """
+
+    def __init__(self, cfg: ModelConfig, opt_cfg: AdamWConfig, params,
+                 data_iter, checkpointer=None, ckpt_every: int = 50,
+                 accum_steps: int = 1, monitor=None,
+                 failure_injector: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.step_fn = jax.jit(make_train_step(cfg, opt_cfg, accum_steps))
+        self.params = params
+        self.opt_state = init_opt_state(params)
+        self.data = data_iter
+        self.ckpt = checkpointer
+        self.ckpt_every = ckpt_every
+        self.monitor = monitor
+        self.failure_injector = failure_injector
+        self.step_idx = 0
+        self.history: list = []
+
+    def restore_if_available(self) -> bool:
+        if self.ckpt is None:
+            return False
+        like = {"params": self.params, "opt_state": self.opt_state,
+                "meta": {"step": 0}}
+        restored = self.ckpt.restore_latest(like=like)
+        if restored is None:
+            return False
+        self.params = jax.tree.map(
+            lambda p, r: jnp.asarray(r, p.dtype), self.params,
+            restored["params"])
+        self.opt_state = jax.tree.map(
+            lambda p, r: jnp.asarray(r, p.dtype), self.opt_state,
+            restored["opt_state"])
+        self.step_idx = int(restored["meta"]["step"])
+        return True
+
+    def _checkpoint(self):
+        if self.ckpt is not None:
+            self.ckpt.save(self.step_idx,
+                           {"params": self.params,
+                            "opt_state": self.opt_state,
+                            "meta": {"step": self.step_idx}})
+
+    def run(self, n_steps: int, max_retries: int = 3) -> Dict[str, Any]:
+        from repro.distributed.fault_tolerance import WorkerFailure
+        metrics: Dict[str, Any] = {}
+        while self.step_idx < n_steps:
+            batch_np = next(self.data)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            if self.cfg.jnp_dtype == jnp.bfloat16:
+                batch = {k: (v.astype(jnp.bfloat16)
+                             if v.dtype == jnp.float32 else v)
+                         for k, v in batch.items()}
+            attempts = 0
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    if self.failure_injector is not None:
+                        self.failure_injector(self.step_idx)
+                    self.params, self.opt_state, metrics = self.step_fn(
+                        self.params, self.opt_state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    break
+                except WorkerFailure:
+                    attempts += 1
+                    if attempts > max_retries:
+                        raise
+                    restored = self.restore_if_available()
+                    if self.monitor:
+                        self.monitor.record_failure(self.step_idx, restored)
+            dt = time.perf_counter() - t0
+            if self.monitor:
+                self.monitor.record_step(self.step_idx, dt)
+            self.history.append(float(metrics["loss"]))
+            self.step_idx += 1
+            if self.ckpt_every and self.step_idx % self.ckpt_every == 0:
+                self._checkpoint()
+        self._checkpoint()
+        return {k: float(v) for k, v in metrics.items()}

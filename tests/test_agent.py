@@ -1,0 +1,59 @@
+from repro.agent import build_runtime, build_tasks
+from repro.core.controller import LLMController
+
+
+def test_agent_runs_tasks_and_traces():
+    rt = build_runtime(model="gpt-4-turbo", prompting="cot", few_shot=True,
+                       use_cache=True, seed=0)
+    tasks = build_tasks(10, reuse_rate=0.8, seed=2, store=rt.store)
+    traces = rt.run(tasks)
+    assert len(traces) == 10
+    for tr in traces:
+        assert tr.tokens > 5_000
+        assert tr.tool_calls >= 5
+        assert tr.time_s > 1.0
+
+
+def test_cache_reduces_time_no_metric_damage():
+    reports = {}
+    for use_cache in (False, True):
+        rt = build_runtime(model="gpt-4-turbo", prompting="cot",
+                           few_shot=True, use_cache=use_cache, seed=0)
+        tasks = build_tasks(80, reuse_rate=0.8, seed=2, store=rt.store)
+        reports[use_cache] = rt.run_and_evaluate(tasks)
+    speedup = reports[False].avg_time_s / reports[True].avg_time_s
+    assert speedup > 1.08                      # paper: 1.15-1.33x
+    # no degradation beyond variance bounds (sampling noise at n=80)
+    assert abs(reports[True].success_rate - reports[False].success_rate) < 0.15
+    assert reports[True].gpt_hit_rate > 0.9
+
+
+def test_cache_miss_replan_path():
+    rt = build_runtime(model="gpt-3.5-turbo", prompting="cot", few_shot=False,
+                       use_cache=True, seed=1)
+    tasks = build_tasks(60, reuse_rate=0.8, seed=4, store=rt.store)
+    traces = rt.run(tasks)
+    # gpt-3.5 eps=5.5%: some read decisions are wrong -> miss -> replan
+    assert sum(t.cache_miss_replans for t in traces) >= 1
+    assert isinstance(rt.runner.controller, LLMController)
+
+
+def test_react_uses_more_tokens_than_cot():
+    toks = {}
+    for prompting in ("cot", "react"):
+        rt = build_runtime(model="gpt-4-turbo", prompting=prompting,
+                           few_shot=True, use_cache=True, seed=0)
+        tasks = build_tasks(20, reuse_rate=0.8, seed=2, store=rt.store)
+        rep = rt.run_and_evaluate(tasks)
+        toks[prompting] = rep.avg_tokens
+    assert toks["react"] > toks["cot"]
+
+
+def test_determinism_same_seed():
+    def run():
+        rt = build_runtime(model="gpt-4-turbo", prompting="cot",
+                           few_shot=True, use_cache=True, seed=7)
+        tasks = build_tasks(15, reuse_rate=0.8, seed=9, store=rt.store)
+        rep = rt.run_and_evaluate(tasks)
+        return (rep.avg_time_s, rep.avg_tokens, rep.success_rate)
+    assert run() == run()

@@ -1,0 +1,91 @@
+import pytest
+
+from repro.core.cache import DataCache
+from repro.core.policies import make_policy
+
+
+def test_put_get_roundtrip():
+    c = DataCache(capacity=3)
+    c.put("a-2020", {"x": 1}, 100)
+    assert "a-2020" in c
+    assert c.get("a-2020") == {"x": 1}
+    assert c.stats.hits == 1
+
+
+def test_miss_raises_and_counts():
+    c = DataCache(capacity=2)
+    with pytest.raises(KeyError):
+        c.get("nope-2020")
+    assert c.stats.misses == 1
+
+
+def test_put_full_requires_victim():
+    c = DataCache(capacity=2)
+    c.put("a", 1, 1)
+    c.put("b", 2, 1)
+    with pytest.raises(ValueError):
+        c.put("c", 3, 1)                    # no victim given
+    evicted = c.put("c", 3, 1, victim="a")
+    assert evicted == "a"
+    assert sorted(c.keys()) == ["b", "c"]
+    assert c.stats.evictions == 1
+
+
+def test_reput_existing_key_no_eviction():
+    c = DataCache(capacity=2)
+    c.put("a", 1, 1)
+    c.put("b", 2, 1)
+    c.put("a", 10, 1)                       # overwrite, cache full but no evict
+    assert c.get("a") == 10
+    assert c.stats.evictions == 0
+
+
+def test_recency_and_frequency_metadata():
+    c = DataCache(capacity=3)
+    c.put("a", 1, 1)
+    c.put("b", 2, 1)
+    c.get("a")
+    c.get("a")
+    c.get("b")
+    ents = c.entries()
+    assert ents["a"].access_count == 2
+    assert ents["b"].access_count == 1
+    assert ents["b"].last_access > ents["a"].last_access
+
+
+def test_apply_state_reconciles():
+    c = DataCache(capacity=3)
+    loader = lambda k: f"value:{k}"
+    size_of = lambda v: len(v)
+    c.put("a", "va", 2)
+    c.put("b", "vb", 2)
+    c.apply_state(["b", "c"], loader, size_of)
+    assert sorted(c.keys()) == ["b", "c"]
+    assert c.peek("c") == "value:c"
+    assert c.stats.evictions == 1           # "a" dropped
+
+
+def test_apply_state_respects_capacity():
+    c = DataCache(capacity=2)
+    c.apply_state(["a", "b", "c", "d"], lambda k: k, lambda v: 1)
+    assert len(c) <= 2
+
+
+def test_lru_end_to_end():
+    c = DataCache(capacity=2)
+    pol = make_policy("lru")
+    c.put("a", 1, 1)
+    c.put("b", 2, 1)
+    c.get("a")                               # b is now LRU
+    victim = pol.victim(c.entries())
+    assert victim == "b"
+
+
+def test_contents_json_fields():
+    import json
+    c = DataCache(capacity=2)
+    c.put("xview1-2022", 1, 55_000_000)
+    d = json.loads(c.contents_json())
+    e = d["xview1-2022"]
+    assert set(e) >= {"last_access", "access_count", "insert_order", "size_mb"}
+    assert e["size_mb"] == 55.0

@@ -1,0 +1,85 @@
+"""Controller tests: the four Table III configurations + error handling."""
+import pytest
+
+from repro.agent.backends import Profile, SimLLM
+from repro.core.cache import DataCache
+from repro.core.controller import (
+    LLMController,
+    ProgrammaticController,
+    make_controller,
+)
+from repro.core.policies import make_policy
+
+
+def mk(read_impl="llm", update_impl="llm", eps_model="gpt-4-turbo"):
+    cache = DataCache(capacity=3)
+    llm = SimLLM(Profile(eps_model, "cot", True), seed=0)
+    ctrl = make_controller(cache, make_policy("lru"), llm=llm,
+                           read_impl=read_impl, update_impl=update_impl)
+    return cache, ctrl
+
+
+LOADER = staticmethod(lambda k: f"data:{k}")
+SIZE = staticmethod(lambda v: len(v))
+
+
+def test_programmatic_read_plan_exact():
+    cache, ctrl = mk("python", "python")
+    assert isinstance(ctrl, ProgrammaticController)
+    cache.put("x-2020", 1, 1)
+    plan = ctrl.plan_reads("q", ["x-2020", "y-2021"])
+    assert plan.choices == {"x-2020": "read_cache", "y-2021": "load_db"}
+
+
+def test_programmatic_update_applies_lru():
+    cache, ctrl = mk("python", "python")
+    for k in ("a", "b", "c"):
+        cache.put(k, k, 1)
+    cache.get("a"); cache.get("c")           # b least recent
+    ctrl.update(["d"], lambda k: k, lambda v: 1)
+    assert "b" not in cache and "d" in cache
+
+
+def test_llm_controller_read_grading():
+    cache, ctrl = mk("llm", "llm")
+    assert isinstance(ctrl, LLMController)
+    cache.put("x-2020", 1, 1)
+    for _ in range(30):
+        ctrl.plan_reads("show x-2020 and y-2021", ["x-2020", "y-2021"])
+    st = cache.stats
+    assert st.llm_total_decisions == 60
+    # gpt-4 eps=3.4%: overwhelming majority correct
+    assert st.llm_correct_decisions / st.llm_total_decisions > 0.85
+
+
+def test_llm_update_matches_programmatic_mostly():
+    cache, ctrl = mk("llm", "llm")
+    keys = [f"d{i}-2020" for i in range(12)]
+    for k in keys:
+        ctrl.update([k], lambda k: k, lambda v: 1)
+        assert len(cache) <= cache.capacity
+    st = cache.stats
+    assert st.gpt_hit_rate > 0.7
+
+
+def test_mixed_table3_grid_runs():
+    for r in ("python", "llm"):
+        for u in ("python", "llm"):
+            cache, ctrl = mk(r, u)
+            ctrl.plan_reads("q", ["a-2020"])
+            ctrl.update(["a-2020"], lambda k: k, lambda v: 1)
+            assert "a-2020" in cache
+
+
+class BrokenLLM:
+    def complete(self, prompt):
+        return "I cannot help with that."
+
+
+def test_malformed_completion_falls_back_safe():
+    cache = DataCache(capacity=2)
+    ctrl = LLMController(cache, make_policy("lru"), BrokenLLM())
+    plan = ctrl.plan_reads("q", ["a-2020"])
+    assert plan.choices["a-2020"] == "load_db"   # safe slow path
+    ctrl.update(["a-2020"], lambda k: k, lambda v: 1)
+    assert "a-2020" in cache                      # programmatic fallback

@@ -1,0 +1,64 @@
+from repro.core.distributed_cache import PodLocalCacheRouter
+
+
+def mk(n=4):
+    return PodLocalCacheRouter([f"pod{i}" for i in range(n)],
+                               capacity_per_pod=3)
+
+
+LOADER = lambda k: f"data:{k}"
+SIZE = lambda v: len(v)
+
+
+def test_owner_is_deterministic():
+    r1, r2 = mk(), mk()
+    keys = [f"ds{i}-202{i % 4}" for i in range(20)]
+    assert [r1.owner(k) for k in keys] == [r2.owner(k) for k in keys]
+
+
+def test_keys_spread_across_pods():
+    r = mk(4)
+    owners = {r.owner(f"ds{i}-2020") for i in range(40)}
+    assert len(owners) >= 3
+
+
+def test_locality_second_fetch_hits():
+    r = mk()
+    _, pod1, hit1 = r.fetch("xview1-2022", LOADER, SIZE)
+    _, pod2, hit2 = r.fetch("xview1-2022", LOADER, SIZE)
+    assert pod1 == pod2
+    assert (hit1, hit2) == (False, True)
+    assert r.stats.local_hits == 1
+
+
+def test_failover_reroutes_minimally():
+    r = mk(4)
+    keys = [f"ds{i}-2021" for i in range(24)]
+    before = {k: r.owner(k) for k in keys}
+    dead = r.owner(keys[0])
+    r.fail_pod(dead)
+    after = {k: r.owner(k) for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    # rendezvous hashing: ONLY keys owned by the dead pod move
+    assert all(before[k] == dead for k in moved)
+    assert all(after[k] != dead for k in keys)
+    # recovery: owner map returns exactly to the original
+    r.restore_pod(dead)
+    assert {k: r.owner(k) for k in keys} == before
+
+
+def test_failed_pod_cache_is_cold():
+    r = mk(2)
+    r.fetch("a-2020", LOADER, SIZE)
+    dead = r.owner("a-2020")
+    r.fail_pod(dead)
+    r.restore_pod(dead)
+    _, _, hit = r.fetch("a-2020", LOADER, SIZE)
+    assert hit is False                      # contents were lost
+
+
+def test_summary_shape():
+    r = mk(2)
+    r.fetch("a-2020", LOADER, SIZE)
+    s = r.summary()
+    assert set(s) >= {"pods", "routed", "local_hit_rate", "failovers"}

@@ -1,0 +1,83 @@
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.checkpoint import Checkpointer
+from repro.distributed.fault_tolerance import (
+    FailureInjector,
+    HeartbeatMonitor,
+    PreemptionGuard,
+    WorkerFailure,
+)
+from repro.models import Init, init_model, unbox
+from repro.training import AdamWConfig, TokenStream, TrainLoop
+
+
+def test_heartbeat_straggler_detection():
+    mon = HeartbeatMonitor(straggler_sigma=3.0)
+    for i in range(20):
+        mon.record_step(i, 0.10 + 0.001 * (i % 3))
+    assert not mon.stragglers
+    mon.record_step(20, 1.5)                    # 15x slower step
+    assert 20 in mon.stragglers
+    assert mon.is_straggling(2.0)
+    assert not mon.is_straggling(0.11)
+
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector([3])
+    inj(2)
+    with pytest.raises(WorkerFailure):
+        inj(3)
+    inj(3)                                       # second pass: already fired
+
+
+def test_preemption_guard_checkpoints_once():
+    calls = []
+    g = PreemptionGuard(lambda: calls.append(1))
+    g.notify()
+    g.notify()
+    assert calls == [1]
+    assert g.preempted
+
+
+def test_train_loop_survives_failures_and_resumes(tmp_path):
+    cfg = get_config("dcache-agent-150m").reduced()
+    params, _ = unbox(init_model(Init(jax.random.PRNGKey(0),
+                                      dtype=cfg.jnp_dtype), cfg))
+    stream = TokenStream(cfg, batch=4, seq=24, seed=0)
+    mon = HeartbeatMonitor()
+    ck = Checkpointer(str(tmp_path), keep=2)
+    loop = TrainLoop(cfg, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=20),
+                     params, iter(stream.next_batch, None),
+                     checkpointer=ck, ckpt_every=4, monitor=mon,
+                     failure_injector=FailureInjector([5, 9]))
+    loop.run(12)
+    assert len(mon.failures) == 2
+    assert all(f["restored"] for f in mon.failures)
+    assert loop.step_idx == 12
+
+    # cold restart resumes from the last checkpoint
+    loop2 = TrainLoop(cfg, AdamWConfig(), params,
+                      iter(stream.next_batch, None), checkpointer=ck)
+    assert loop2.restore_if_available()
+    assert loop2.step_idx == 12
+
+
+def test_train_loop_gives_up_after_max_retries(tmp_path):
+    cfg = get_config("dcache-agent-150m").reduced()
+    params, _ = unbox(init_model(Init(jax.random.PRNGKey(0),
+                                      dtype=cfg.jnp_dtype), cfg))
+    stream = TokenStream(cfg, batch=2, seq=16, seed=0)
+
+    def always_fail(step):
+        raise WorkerFailure("node is gone")
+
+    loop = TrainLoop(cfg, AdamWConfig(), params,
+                     iter(stream.next_batch, None),
+                     failure_injector=always_fail)
+    with pytest.raises(WorkerFailure):
+        loop.run(2, max_retries=2)

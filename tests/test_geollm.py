@@ -1,0 +1,86 @@
+import numpy as np
+
+from repro.agent.geollm.datastore import GeoDataStore, all_keys, synth_frame
+from repro.agent.geollm.evaluator import rouge_l
+from repro.agent.geollm.simclock import SimClock
+from repro.agent.geollm.workload import (
+    WorkloadSampler,
+    compute_gold,
+    make_benchmark,
+    model_check,
+)
+from repro.agent.geollm import geotools
+
+
+def test_catalog_scale():
+    keys = all_keys()
+    assert len(keys) == 72
+    # paper platform: >1.1M images total (sampled estimate on 6 keys)
+    sizes = [len(synth_frame(k)) for k in keys[:6]]
+    est_total = np.mean(sizes) * len(keys)
+    assert est_total > 0.8e6
+
+
+def test_frames_deterministic():
+    f1, f2 = synth_frame("xview1-2022"), synth_frame("xview1-2022")
+    np.testing.assert_array_equal(f1.lon, f2.lon)
+    np.testing.assert_array_equal(f1.det_count, f2.det_count)
+
+
+def test_frame_size_in_paper_band():
+    f = synth_frame("fair1m-2021")
+    assert 30 <= f.size_mb <= 150          # paper: 50-100MB typical
+
+
+def test_db_latency_vs_cache_latency_ratio():
+    clock = SimClock()
+    store = GeoDataStore(clock)
+    t0 = clock.now()
+    store.load("dota-2019")
+    db = clock.now() - t0
+    cr = store.cache_read_latency("dota-2019")
+    assert 5.0 <= db / cr <= 10.0          # paper: cache 5-10x faster
+
+
+def test_tools_pipeline():
+    f = synth_frame("xview1-2022")
+    roi = geotools.filter_bbox(f, "houston")
+    assert 0 < len(roi) < len(f)
+    det = geotools.detect_objects(roi, "ship")
+    assert det["detections"] >= 0
+    covers = geotools.dominant_land_covers(roi, 2)
+    assert len(covers) == 2
+    ans = geotools.vqa_answer(roi, "what is here?")
+    assert "images" in ans
+
+
+def test_workload_reuse_rate_controls_locality():
+    """reuse_rate = probability the next key is in the recent working set."""
+    def ws_hit_frac(rr, window=5):
+        s = WorkloadSampler(reuse_rate=rr, seed=0)
+        tasks = s.sample(200)
+        keys = [k for t in tasks for k in t.required_keys]
+        recent, hits = [], 0
+        for k in keys:
+            hits += k in recent
+            recent = ([k] + [x for x in recent if x != k])[:window]
+        return hits / len(keys)
+    lo, hi = ws_hit_frac(0.0), ws_hit_frac(0.8)
+    assert hi > 0.5
+    assert hi > lo + 0.3
+
+
+def test_benchmark_gold_and_model_checker():
+    clock = SimClock()
+    store = GeoDataStore(clock)
+    tasks = make_benchmark(25, reuse_rate=0.8, seed=3, store=store)
+    assert all(s.gold is not None for t in tasks for s in t.steps)
+    assert model_check(tasks, store) == []
+    calls = np.mean([t.n_tool_calls for t in tasks])
+    assert 8 <= calls <= 30                # multi-step, ~50k calls / 1k tasks
+
+
+def test_rouge_l():
+    assert rouge_l("the cat sat", "the cat sat") == 1.0
+    assert rouge_l("", "gold") == 0.0
+    assert 0 < rouge_l("the dog sat", "the cat sat") < 1.0

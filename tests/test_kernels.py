@@ -1,0 +1,94 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def arr(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(0, scale, shape), dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,d", [
+    (2, 4, 2, 256, 64), (1, 8, 8, 128, 128), (2, 6, 2, 128, 32),
+    (1, 4, 1, 512, 64),
+])
+@pytest.mark.parametrize("mask", ["causal", "window", "chunk", "full"])
+def test_flash_attention_sweep(B, Hq, Hkv, S, d, mask):
+    kw = {"causal": dict(causal=True),
+          "window": dict(causal=True, window=64),
+          "chunk": dict(causal=True, chunk=128),
+          "full": dict(causal=False)}[mask]
+    q, k, v = arr(B, Hq, S, d), arr(B, Hkv, S, d), arr(B, Hkv, S, d)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64, **kw)
+    gold = ref.ref_flash_attention(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                               **tol(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q, k, v = (arr(1, 4, 128, 64, dtype=dtype) for _ in range(3))
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    gold = ref.ref_flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,C,d", [
+    (2, 4, 2, 256, 64), (3, 8, 8, 128, 32), (1, 16, 2, 512, 128),
+])
+@pytest.mark.parametrize("mask", ["none", "window", "chunk"])
+def test_decode_attention_sweep(B, Hq, Hkv, C, d, mask):
+    kw = {"none": {}, "window": dict(window=64),
+          "chunk": dict(chunk=128)}[mask]
+    q, k, v = arr(B, Hq, d), arr(B, Hkv, C, d), arr(B, Hkv, C, d)
+    pos = jnp.asarray(RNG.integers(1, 3 * C, B), jnp.int32)
+    out = ops.decode_attention(q, k, v, pos, block_k=64, **kw)
+    gold = ref.ref_decode_attention(q, k, v, pos, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                               **tol(jnp.float32))
+
+
+def test_decode_attention_short_history():
+    """pos < C: unwritten ring slots must be masked out."""
+    B, Hq, Hkv, C, d = 2, 4, 2, 128, 64
+    q, k, v = arr(B, Hq, d), arr(B, Hkv, C, d), arr(B, Hkv, C, d)
+    pos = jnp.asarray([3, 17], jnp.int32)
+    out = ops.decode_attention(q, k, v, pos, block_k=64)
+    gold = ref.ref_decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                               **tol(jnp.float32))
+
+
+@pytest.mark.parametrize("B,H,S,hd", [(2, 3, 128, 64), (1, 2, 64, 32)])
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_wkv_sweep(B, H, S, hd, chunk):
+    r, k, v = arr(B, H, S, hd), arr(B, H, S, hd), arr(B, H, S, hd)
+    w = jnp.asarray(RNG.uniform(0.8, 0.999, (B, H, S, hd)), jnp.float32)
+    u = arr(H, hd)
+    y, s = ops.wkv(r, k, v, w, u, chunk=chunk)
+    yg, sg = ref.ref_wkv(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yg),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sg),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(8, 256), (2, 5, 128), (3, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = arr(*shape, dtype=dtype)
+    g = arr(shape[-1], dtype=dtype)
+    out = ops.rmsnorm(x, g)
+    gold = ref.ref_rmsnorm(x, g)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32), **tol(dtype))

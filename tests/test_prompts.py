@@ -1,0 +1,62 @@
+import json
+
+import pytest
+
+from repro.core.prompts import (
+    parse_json_tail,
+    read_decision_prompt,
+    update_decision_prompt,
+)
+from repro.agent.backends import Profile, SimLLM
+
+
+def test_read_prompt_contains_contract():
+    p = read_decision_prompt("show xview1 2022", ["xview1-2022"],
+                             "{}", few_shot=True)
+    assert "read_cache" in p and "load_db" in p
+    assert "xview1-2022" in p
+    assert "Example 1" in p
+    p0 = read_decision_prompt("q", ["k-2020"], "{}", few_shot=False)
+    assert "Example 1" not in p0
+
+
+def test_update_prompt_contains_policy_text():
+    p = update_decision_prompt("Least Recently Used (LRU): ...", ["a-2020"],
+                               "{}", 5, few_shot=True)
+    assert "at most 5 entries" in p
+    assert "Least Recently Used" in p
+
+
+def test_parse_json_tail_variants():
+    assert parse_json_tail('Thought: blah\nAnswer: {"a": 1}') == {"a": 1}
+    assert parse_json_tail('["x", "y"]') == ["x", "y"]
+    with pytest.raises(ValueError):
+        parse_json_tail("no json here")
+
+
+def test_simllm_read_decision_parses_own_prompt():
+    llm = SimLLM(Profile("gpt-4-turbo", "cot", True), seed=0)
+    cache = json.dumps({"a-2020": {"last_access": 1.0}})
+    p = read_decision_prompt("q", ["a-2020", "b-2021"], cache, few_shot=True)
+    out = parse_json_tail(llm.complete(p))
+    assert set(out) == {"a-2020", "b-2021"}
+    assert out["a-2020"] in ("read_cache", "load_db")
+
+
+def test_simllm_update_decision_applies_lru():
+    llm = SimLLM(Profile("gpt-4-turbo", "cot", True), seed=0)
+    cache = json.dumps({
+        "a-2020": {"last_access": 1.0, "access_count": 1, "insert_order": 1},
+        "b-2020": {"last_access": 9.0, "access_count": 1, "insert_order": 2},
+    })
+    p = update_decision_prompt(
+        "Least Recently Used (LRU): evict the entry whose last access is "
+        "the OLDEST.", ["c-2021"], cache, 2, few_shot=True)
+    # eps small: across many draws the majority must evict "a"
+    evicted_a = 0
+    for seed in range(20):
+        llm = SimLLM(Profile("gpt-4-turbo", "cot", True), seed=seed)
+        state = parse_json_tail(llm.complete(p))
+        if "a-2020" not in state and "c-2021" in state:
+            evicted_a += 1
+    assert evicted_a >= 17

@@ -1,0 +1,83 @@
+"""Property-based tests (hypothesis) for the dCache invariants."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.cache import DataCache
+from repro.core.distributed_cache import PodLocalCacheRouter
+from repro.core.policies import make_policy
+
+KEYS = st.sampled_from([f"ds{i}-20{y}" for i in range(6) for y in range(18, 24)])
+OPS = st.lists(
+    st.tuples(st.sampled_from(["put", "get"]), KEYS), min_size=1, max_size=60)
+
+
+@given(ops=OPS, cap=st.integers(min_value=1, max_value=5))
+@settings(max_examples=60, deadline=None)
+def test_capacity_never_exceeded_and_stats_consistent(ops, cap):
+    c = DataCache(capacity=cap)
+    pol = make_policy("lru")
+    gets = hits = 0
+    for op, k in ops:
+        if op == "put":
+            victim = None
+            if k not in c and len(c) >= cap:
+                victim = pol.victim(c.entries())
+            c.put(k, k, 1, victim=victim)
+        else:
+            gets += 1
+            try:
+                c.get(k)
+                hits += 1
+            except KeyError:
+                pass
+        assert len(c) <= cap
+    assert c.stats.hits == hits
+    assert c.stats.hits + c.stats.misses == gets
+
+
+@given(ops=OPS)
+@settings(max_examples=40, deadline=None)
+def test_lru_victim_is_least_recent(ops):
+    c = DataCache(capacity=3)
+    pol = make_policy("lru")
+    for op, k in ops:
+        if op == "put":
+            victim = None
+            if k not in c and len(c) >= 3:
+                ents = c.entries()
+                victim = pol.victim(ents)
+                assert ents[victim].last_access == min(
+                    e.last_access for e in ents.values())
+            c.put(k, k, 1, victim=victim)
+        elif k in c:
+            c.get(k)
+
+
+@given(keys=st.lists(KEYS, min_size=1, max_size=10, unique=True))
+@settings(max_examples=40, deadline=None)
+def test_apply_state_is_idempotent(keys):
+    c = DataCache(capacity=5)
+    loader = lambda k: k
+    size = lambda v: 1
+    c.apply_state(keys, loader, size)
+    first = sorted(c.keys())
+    ev_before = c.stats.evictions
+    c.apply_state(first, loader, size)
+    assert sorted(c.keys()) == first
+    assert c.stats.evictions == ev_before
+
+
+@given(keys=st.lists(KEYS, min_size=5, max_size=30, unique=True),
+       kill=st.integers(min_value=0, max_value=3))
+@settings(max_examples=40, deadline=None)
+def test_rendezvous_minimal_disruption(keys, kill):
+    r = PodLocalCacheRouter([f"p{i}" for i in range(4)])
+    before = {k: r.owner(k) for k in keys}
+    dead = f"p{kill}"
+    r.fail_pod(dead)
+    for k in keys:
+        after = r.owner(k)
+        if before[k] != dead:
+            assert after == before[k]       # survivors keep their keys
+        else:
+            assert after != dead

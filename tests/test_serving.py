@@ -1,0 +1,93 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import Init, init_model, unbox
+from repro.serving import ByteTokenizer, ServingEngine, sample
+
+
+def engine(max_batch=3, max_len=96, family_arch="dcache-agent-150m"):
+    cfg = dataclasses.replace(get_config(family_arch).reduced(),
+                              vocab_size=512)
+    params, _ = unbox(init_model(Init(jax.random.PRNGKey(0),
+                                      dtype=cfg.jnp_dtype), cfg))
+    return ServingEngine(cfg, params, max_batch=max_batch, max_len=max_len)
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    ids = tok.encode("hello, dCache!")
+    assert ids[0] == tok.bos_id
+    assert tok.decode(ids[1:]) == "hello, dCache!"
+
+
+def test_sampler_greedy_and_topk():
+    logits = jnp.asarray([[0.1, 5.0, -1.0], [2.0, 0.0, 3.0]], jnp.float32)
+    out = sample(logits, jax.random.PRNGKey(0))
+    assert out.tolist() == [1, 2]
+    out2 = sample(logits, jax.random.PRNGKey(0), temperature=1.0, top_k=1)
+    assert out2.tolist() == [1, 2]             # top-1 == greedy
+
+
+def test_batched_requests_complete():
+    eng = engine()
+    reqs = [eng.submit(p, max_new_tokens=6) for p in
+            ("alpha", "a much longer prompt about satellites", "geo")]
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert all(1 <= len(r.out_ids) <= 6 for r in reqs)
+    s = eng.stats()
+    assert s["finished"] == 3 and s["throughput_tok_s"] > 0
+
+
+def test_more_requests_than_slots():
+    eng = engine(max_batch=2)
+    reqs = [eng.submit(f"req {i}", max_new_tokens=4) for i in range(5)]
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+
+
+def test_greedy_determinism_across_batching():
+    """A request must decode the same tokens alone or batched (slots are
+    independent: ring caches + per-row pos)."""
+    eng1 = engine(max_batch=1)
+    r_alone = eng1.submit("determinism test prompt", max_new_tokens=5)
+    eng1.run_until_done()
+
+    eng2 = engine(max_batch=3)
+    r_b = eng2.submit("determinism test prompt", max_new_tokens=5)
+    eng2.submit("other request one", max_new_tokens=5)
+    eng2.submit("yet another", max_new_tokens=5)
+    eng2.run_until_done()
+    assert r_alone.out_ids == r_b.out_ids
+
+
+def test_padding_invariance():
+    """Bucket padding must not change the decoded tokens (mask proof)."""
+    eng = engine(max_batch=1)
+    # 9 chars -> bucket 16 (padded); compare vs exact-length bucket
+    r1 = eng.submit("abcdefgh", max_new_tokens=5)   # 9 ids with BOS
+    eng.run_until_done()
+
+    eng2 = engine(max_batch=1)
+    # force exact bucketing by monkeypatching _bucket
+    import repro.serving.engine as E
+    orig = E._bucket
+    E._bucket = lambda n, cap: n
+    try:
+        r2 = eng2.submit("abcdefgh", max_new_tokens=5)
+        eng2.run_until_done()
+    finally:
+        E._bucket = orig
+    assert r1.out_ids == r2.out_ids
+
+
+def test_max_len_cap_terminates():
+    eng = engine(max_batch=1, max_len=24)
+    r = eng.submit("x" * 10, max_new_tokens=500)
+    eng.run_until_done()
+    assert r.done
+    assert len(r.out_ids) < 30

@@ -1,0 +1,78 @@
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    logical_to_spec,
+    multi_pod_rules,
+    single_pod_rules,
+)
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape mapping (enough for spec derivation)."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_basic_weight_spec():
+    spec = logical_to_spec(("embed", "mlp"), (4096, 16384), MESH1,
+                           single_pod_rules())
+    assert spec == P("data", "model")
+
+
+def test_divisibility_fallback_vocab():
+    # 49155 % 16 != 0 -> vocab axis falls back to replication
+    spec = logical_to_spec(("vocab", "embed"), (49155, 2048), MESH1,
+                           single_pod_rules())
+    assert spec == P(None, "data")
+    # padded vocab shards fine
+    spec2 = logical_to_spec(("vocab", "embed"), (49408, 2048), MESH1,
+                            single_pod_rules())
+    assert spec2 == P("model", "data")
+
+
+def test_batch_one_replicates():
+    spec = logical_to_spec(("batch", "seq", "act_embed"), (1, 524288, 4096),
+                           MESH1, single_pod_rules())
+    assert spec == P(None, None, None)
+
+
+def test_multi_pod_batch_axis():
+    spec = logical_to_spec(("batch", "seq"), (256, 4096), MESH2,
+                           multi_pod_rules())
+    assert spec == P(("pod", "data"), None)
+
+
+def test_multi_axis_prefix_fallback():
+    # batch=16 divisible by data(16) but not pod*data(32): falls back to
+    # the longest divisible prefix ("pod",)? 16 % 2 == 0 -> ("pod",)
+    spec = logical_to_spec(("batch",), (16,), MESH2, multi_pod_rules())
+    assert spec in (P("pod"), P(("pod",)))
+
+
+def test_mesh_axis_not_reused_in_one_spec():
+    rules = single_pod_rules()
+    # both dims want "model": second one must drop
+    spec = logical_to_spec(("mlp", "kv"), (16384, 1024), MESH1, rules)
+    flat = []
+    for e in spec:
+        if e is None:
+            continue
+        flat.extend([e] if isinstance(e, str) else list(e))
+    assert len(flat) == len(set(flat))
+
+
+def test_empty_name_means_replicated():
+    spec = logical_to_spec(("", "embed"), (7, 2048), MESH1,
+                           single_pod_rules())
+    assert spec == P(None, "data")
+
+
+def test_production_mesh_axes_present():
+    rules = multi_pod_rules()
+    assert rules["embed"] == ("pod", "data")
+    assert rules["batch"] == ("pod", "data")

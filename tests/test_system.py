@@ -1,0 +1,75 @@
+"""End-to-end behaviour tests: the paper's claims at benchmark-mini scale."""
+import numpy as np
+import pytest
+
+from repro.agent import build_runtime, build_tasks
+
+
+def run_cell(model, prompting, few_shot, use_cache, n=50, reuse=0.8,
+             seed=0, **kw):
+    rt = build_runtime(model=model, prompting=prompting, few_shot=few_shot,
+                       use_cache=use_cache, seed=seed, **kw)
+    tasks = build_tasks(n, reuse_rate=reuse, seed=11, store=rt.store)
+    return rt.run_and_evaluate(tasks)
+
+
+def test_claim_speedup_across_configs():
+    """Table I: latency reduction across models x prompting, ~1.24x avg."""
+    speedups = []
+    for model in ("gpt-3.5-turbo", "gpt-4-turbo"):
+        for prompting in ("cot", "react"):
+            r0 = run_cell(model, prompting, True, use_cache=False)
+            r1 = run_cell(model, prompting, True, use_cache=True)
+            speedups.append(r0.avg_time_s / r1.avg_time_s)
+    mean = float(np.mean(speedups))
+    assert mean > 1.10, speedups
+    assert all(s > 1.02 for s in speedups), speedups
+
+
+def test_claim_no_agent_metric_degradation():
+    r0 = run_cell("gpt-4-turbo", "cot", True, use_cache=False, n=60)
+    r1 = run_cell("gpt-4-turbo", "cot", True, use_cache=True, n=60)
+    assert abs(r1.success_rate - r0.success_rate) < 0.12
+    assert abs(r1.obj_det_f1 - r0.obj_det_f1) < 0.12
+    assert abs(r1.vqa_rouge - r0.vqa_rouge) < 0.12
+
+
+def test_claim_speedup_grows_with_reuse_rate():
+    """Table II: higher reuse -> bigger latency savings (per-rate speedup,
+    since the reuse rate changes the sampled tasks themselves)."""
+    speedups = {}
+    for rr in (0.0, 0.8):
+        r0 = run_cell("gpt-3.5-turbo", "cot", False, use_cache=False,
+                      reuse=rr, n=60)
+        r1 = run_cell("gpt-3.5-turbo", "cot", False, use_cache=True,
+                      reuse=rr, n=60)
+        speedups[rr] = r0.avg_time_s / r1.avg_time_s
+    assert speedups[0.8] > speedups[0.0] + 0.1
+    assert abs(speedups[0.0] - 1.0) < 0.1     # no reuse -> no gain
+
+
+def test_claim_policies_similar_at_high_reuse():
+    """Table II bottom: LRU/LFU/RR/FIFO within a small band at 80% reuse."""
+    times = []
+    for pol in ("lru", "lfu", "rr", "fifo"):
+        r = run_cell("gpt-3.5-turbo", "cot", False, use_cache=True,
+                     policy=pol, n=60)
+        times.append(r.avg_time_s)
+    # the paper's own Table II spread at 80% reuse is ~9% (4.92..5.36s)
+    assert (max(times) - min(times)) / min(times) < 0.15
+
+
+def test_claim_gpt_driven_matches_programmatic():
+    """Table III: GPT-driven cache ops ~= programmatic upper bound."""
+    rows = {}
+    for read_impl, update_impl in (("python", "python"), ("llm", "python"),
+                                   ("python", "llm"), ("llm", "llm")):
+        r = run_cell("gpt-4-turbo", "cot", True, use_cache=True, n=60,
+                     read_impl=read_impl, update_impl=update_impl)
+        rows[(read_impl, update_impl)] = r
+    base = rows[("python", "python")]
+    for key, r in rows.items():
+        assert abs(r.avg_time_s - base.avg_time_s) / base.avg_time_s < 0.06, \
+            (key, r.avg_time_s, base.avg_time_s)
+        if key != ("python", "python"):
+            assert r.gpt_hit_rate > 0.93        # paper: ~96-98%
