@@ -2,14 +2,33 @@
 
     PYTHONPATH=src python -m benchmarks.run            # standard (fast)
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale 1k tasks
+    PYTHONPATH=src python -m benchmarks.run --parallel # cells on a thread pool
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_dcache.json
 
 Prints CSV (``name,value,derived``-style rows per table) and a summary
-comparing the reproduction against the paper's headline claims.
+comparing the reproduction against the paper's headline claims. ``--json``
+additionally writes a machine-readable record (wall-time, simulated-time
+and speedup metrics per table) so the perf trajectory is tracked across
+PRs — see benchmarks/README.md for the schema.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
+
+
+def _csv_field(rows, prefix, field_idx, row_field=None, cast=float):
+    """Pull one field out of a table's CSV rows (summary extraction)."""
+    for r in rows:
+        cells = r.split(",")
+        if cells[0] == prefix and (row_field is None or row_field(cells)):
+            try:
+                return cast(cells[field_idx])
+            except (ValueError, IndexError):
+                return None
+    return None
 
 
 def main() -> None:
@@ -18,40 +37,107 @@ def main() -> None:
                     help="paper-scale: 1000 tasks (Table I), 500 (ablations)")
     ap.add_argument("--skip-jax", action="store_true",
                     help="skip the jax serving/kernel micro-benches")
+    ap.add_argument("--parallel", action="store_true",
+                    help="run independent benchmark cells on a thread pool "
+                         "(numbers are unchanged; cells are deterministic)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write wall/sim/speedup metrics per table as "
+                         "JSON (perf trajectory tracking across PRs)")
     args = ap.parse_args()
+
+    if args.json:
+        with open(args.json, "a"):    # fail fast on an unwritable path,
+            pass                      # not after minutes of benchmarking
 
     n1 = 1000 if args.full else 300
     n23 = 500 if args.full else 200
+    conc_tasks = 50 if args.full else 25
 
     from benchmarks import tables
 
     t0 = time.time()
     sections = []
+
+    def section(sid, title, fn, **kw):
+        s0 = time.time()
+        rows = fn(**kw)
+        sections.append({"id": sid, "name": title,
+                         "wall_s": round(time.time() - s0, 3), "rows": rows})
+
     print(f"# LLM-dCache benchmarks (n_table1={n1}, n_ablation={n23})",
           flush=True)
 
-    sections.append(("Table I (models x prompting, +/- dCache)",
-                     tables.table1(n=n1)))
-    sections.append(("Table II (reuse rates & policies)",
-                     tables.table2(n=n23)))
-    sections.append(("Table III (GPT-driven vs programmatic)",
-                     tables.table3(n=n23)))
-    sections.append(("Beyond-paper: Belady oracle bound",
-                     tables.belady_bound(n=n23)))
+    par = args.parallel
+    section("table1", "Table I (models x prompting, +/- dCache)",
+            tables.table1, n=n1, parallel=par)
+    section("table2", "Table II (reuse rates & policies)",
+            tables.table2, n=n23, parallel=par)
+    section("table3", "Table III (GPT-driven vs programmatic)",
+            tables.table3, n=n23, parallel=par)
+    section("concurrency", "Concurrency (N sessions on the shared pod cache)",
+            tables.table_concurrency, tasks_per_session=conc_tasks,
+            parallel=par)
+    section("belady", "Beyond-paper: Belady oracle bound",
+            tables.belady_bound, n=n23)
 
     if not args.skip_jax:
         from benchmarks import serving_bench
-        sections.append(("Serving engine (CPU wall-time)",
-                         serving_bench.bench_serving()))
-        sections.append(("Cache ops", serving_bench.bench_cache_ops()))
-        sections.append(("Kernels (interpret mode)",
-                         serving_bench.bench_kernels()))
+        section("serving", "Serving engine (CPU wall-time)",
+                serving_bench.bench_serving)
+        section("cache_ops", "Cache ops", serving_bench.bench_cache_ops)
+        section("kernels", "Kernels (interpret mode)",
+                serving_bench.bench_kernels)
 
-    for title, rows in sections:
-        print(f"\n## {title}")
-        for r in rows:
+    for sec in sections:
+        print(f"\n## {sec['name']}  [{sec['wall_s']}s]")
+        for r in sec["rows"]:
             print(r)
-    print(f"\n# done in {time.time()-t0:.1f}s")
+    total_wall = time.time() - t0
+    print(f"\n# done in {total_wall:.1f}s")
+
+    if args.json:
+        by_id = {s["id"]: s["rows"] for s in sections}
+        t1_rows = by_id.get("table1", [])
+        conc_rows = by_id.get("concurrency", [])
+        conc = [r.split(",") for r in conc_rows if r.startswith("concurrency")]
+        conc_max = max(conc, key=lambda c: int(c[1])) if conc else None
+        record = {
+            "schema": "bench_dcache/v1",
+            "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "platform": {"python": platform.python_version(),
+                         "machine": platform.machine()},
+            "args": {"full": args.full, "skip_jax": args.skip_jax,
+                     "parallel": args.parallel,
+                     "n_table1": n1, "n_ablation": n23},
+            "total_wall_s": round(total_wall, 3),
+            "sections": [{"id": s["id"], "name": s["name"],
+                          "wall_s": s["wall_s"],
+                          "n_rows": len(s["rows"])} for s in sections],
+            "summary": {
+                "table1_mean_sim_speedup": _csv_field(
+                    t1_rows, "table1_summary", 2),
+                "table1_dcache_mean_sim_time_s": _mean_sim_time(t1_rows),
+                "concurrency_max_sessions": (int(conc_max[1])
+                                             if conc_max else None),
+                "concurrency_p95_latency_s": (float(conc_max[5])
+                                              if conc_max else None),
+                "concurrency_stall_total_s": (float(conc_max[9])
+                                              if conc_max else None),
+                "concurrency_local_hit_pct": (float(conc_max[13])
+                                              if conc_max else None),
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json}")
+
+
+def _mean_sim_time(t1_rows) -> float:
+    """Mean simulated per-task latency across Table I's dCache-on cells."""
+    vals = [float(r.split(",")[11]) for r in t1_rows
+            if r.startswith("table1,") and r.split(",")[4] == "on"]
+    return round(sum(vals) / len(vals), 4) if vals else None
 
 
 if __name__ == "__main__":

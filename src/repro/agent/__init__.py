@@ -1,3 +1,10 @@
 from repro.agent.agent import AgentRunner, TaskTrace  # noqa: F401
 from repro.agent.backends import PROFILES, JaxLLM, Profile, SimLLM  # noqa: F401
+from repro.agent.concurrency import (  # noqa: F401
+    ConcurrentEpisodeEngine,
+    EpisodeMetrics,
+    EpisodeResult,
+    run_episode,
+    session_seed,
+)
 from repro.agent.runtime import Runtime, build_runtime, build_tasks  # noqa: F401

@@ -1,0 +1,383 @@
+"""Concurrent multi-session episode engine (discrete-event).
+
+The paper's deployment is "an industry-scale massively parallel platform
+spanning hundreds of GPT endpoints": many agent sessions run at once and
+contend on the *shared* localized cache. This module models that regime:
+
+* **N sessions**, each with its own logical :class:`SimClock`, its own
+  seeded :class:`SimLLM`, and its own task stream (independent work);
+* a **next-event scheduler** that always resumes the session with the
+  smallest logical clock (ties broken by session id — fully deterministic);
+* one shared :class:`PodLocalCacheRouter` + :class:`GeoDataStore`: a key's
+  data is cached on exactly one pod, so sessions working on overlapping
+  keys hit each other's cache fills — and queue behind each other's loads;
+* **per-pod contention**: each pod serves remote DB loads FCFS in schedule
+  order. A load that arrives while the pod is busy stalls until the pod
+  frees up; the stall is charged to the session's clock and surfaced in
+  the episode metrics (p50/p95 task latency, stall totals, per-pod load
+  imbalance).
+
+Granularity: sessions interleave at *task* boundaries (one task runs
+atomically on its session clock; the scheduler then re-inserts the session
+at its new time). Pod busy-windows persist across that interleaving, so a
+session that starts a task "in the past" relative to a pod's busy-until
+still queues — a conservative FCFS-in-schedule-order approximation that is
+exact when task service times are small against task durations.
+
+Single-session behavior is unchanged: ``n_sessions=1`` reproduces the same
+answer/token traces as the plain :class:`repro.agent.runtime.Runtime` path
+(contention can never fire with one session), and answer-quality aggregates
+are independent of N because contention only shifts *time*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.agent.agent import AgentRunner, TaskTrace
+from repro.agent.backends import Profile, SimLLM
+from repro.agent.geollm.datastore import GeoDataStore
+from repro.agent.geollm.evaluator import Report, evaluate
+from repro.agent.geollm.geotools import make_geo_tools
+from repro.agent.geollm.simclock import LatencyModel, SimClock
+from repro.agent.geollm.workload import Task, WorkloadSampler, compute_gold
+from repro.core.controller import ReadPlan
+from repro.core.distributed_cache import PodLocalCacheRouter
+from repro.core.tools import ToolRegistry, ToolSpec
+
+
+# ---------------------------------------------------------------------------
+# Contention: per-pod FCFS service of remote DB loads
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PodLoadStats:
+    loads: int = 0
+    stalled_loads: int = 0
+    stall_s: float = 0.0
+    busy_until: float = 0.0
+
+
+class PodContention:
+    """FCFS queueing model over each pod's load bandwidth."""
+
+    def __init__(self, pod_ids: Sequence[str]):
+        self.pods: Dict[str, PodLoadStats] = {
+            p: PodLoadStats() for p in pod_ids}
+
+    def acquire(self, pod: str, now: float, service_s: float) -> float:
+        """Serve one load; returns the total dwell (stall + service) to
+        charge to the calling session's clock."""
+        st = self.pods[pod]
+        start = max(now, st.busy_until)
+        stall = start - now
+        st.busy_until = start + service_s
+        st.loads += 1
+        if stall > 0:
+            st.stalled_loads += 1
+            st.stall_s += stall
+        return stall + service_s
+
+    @property
+    def total_stall_s(self) -> float:
+        return sum(p.stall_s for p in self.pods.values())
+
+    @property
+    def stalled_loads(self) -> int:
+        return sum(p.stalled_loads for p in self.pods.values())
+
+    @property
+    def total_loads(self) -> int:
+        return sum(p.loads for p in self.pods.values())
+
+    def load_imbalance(self) -> float:
+        """max/mean loads across pods (1.0 = perfectly balanced)."""
+        loads = [p.loads for p in self.pods.values()]
+        mean = float(np.mean(loads)) if loads else 0.0
+        return float(max(loads)) / mean if mean else 1.0
+
+
+# ---------------------------------------------------------------------------
+# Shared-cache controller + tools (the session-side data plane)
+# ---------------------------------------------------------------------------
+
+class SharedCacheController:
+    """Read planner against the pod-sharded shared cache.
+
+    Updates are programmatic and happen at load time (the router installs
+    every loaded key into its owning pod), so ``update`` is a no-op — the
+    multi-session analogue of Table III's programmatic update row. With
+    ``decision_eps > 0`` read decisions flip with that probability,
+    reproducing the GPT-driven read path's calibrated error rate (misses
+    then surface as failed ``read_cache`` calls the agent re-plans around).
+    """
+
+    kind = "shared"
+
+    def __init__(self, router: PodLocalCacheRouter, rng=None,
+                 decision_eps: float = 0.0):
+        self.router = router
+        self.rng = rng
+        self.decision_eps = decision_eps
+
+    def _cached(self, key: str) -> bool:
+        return key in self.router.pods[self.router.owner(key)]
+
+    def plan_reads(self, query: str, required_keys: Sequence[str],
+                   few_shot: bool = False) -> ReadPlan:
+        choices = {}
+        for k in required_keys:
+            c = "read_cache" if self._cached(k) else "load_db"
+            if (self.decision_eps and self.rng is not None
+                    and self.rng.random() < self.decision_eps):
+                c = "load_db" if c == "read_cache" else "read_cache"
+            choices[k] = c
+        return ReadPlan(choices)
+
+    def update(self, loads: Sequence[str], loader: Callable[[str], Any],
+               size_of: Callable[[Any], int]) -> None:
+        return None
+
+
+def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
+                            contention: PodContention, clock: SimClock,
+                            session_stats: "SessionStats") -> List[ToolSpec]:
+    """Per-session ``read_cache`` / ``load_db`` bound to the shared router.
+
+    ``read_cache`` hits the owning pod's local cache (fast, contention-free);
+    ``load_db`` queues on the owning pod's load bandwidth, charges the stall
+    plus DB service time to the session clock, and installs the frame into
+    the pod cache (first fill wins — later sessions hit it).
+    """
+
+    # routed counts *successful* acquisitions (one per logical access), so
+    # local_hits + remote_loads == routed even when an erroneous read
+    # decision misses and the agent re-plans into load_db.
+    def read_cache(key: str):
+        pod = router.owner(key)
+        value = router.pods[pod].get(key)    # raises KeyError on miss
+        router.stats.routed += 1
+        router.stats.local_hits += 1
+        clock.advance(clock.latency.cache_read(value.size_mb))
+        return value
+
+    def load_db(key: str):
+        pod = router.owner(key)
+        frame = store.peek(key)
+        store.loads += 1
+        router.stats.routed += 1
+        router.stats.remote_loads += 1
+        service = clock.latency.db_load(frame.size_mb)
+        dwell = contention.acquire(pod, clock.now(), service)
+        stall = dwell - service
+        if stall > 0:
+            session_stats.stalled_loads += 1
+            session_stats.stall_s += stall
+        clock.advance(dwell)
+        router.install(pod, key, frame, frame.size_bytes)
+        return frame
+
+    return [
+        ToolSpec(
+            name="read_cache",
+            description=("Read imagery metadata for a `dataset-year` key "
+                         "from the SHARED POD CACHE. Fast (pod-local). "
+                         "Fails if the key is not currently cached."),
+            parameters={"key": {"type": "string"}},
+            fn=read_cache),
+        ToolSpec(
+            name="load_db",
+            description=("Load imagery metadata for a `dataset-year` key "
+                         "from the REMOTE DATABASE. Slow; queues on the "
+                         "owning pod under concurrent load."),
+            parameters={"key": {"type": "string"}},
+            fn=load_db),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Sessions + engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SessionStats:
+    stalled_loads: int = 0
+    stall_s: float = 0.0
+
+
+@dataclasses.dataclass
+class Session:
+    sid: int
+    clock: SimClock
+    llm: SimLLM
+    runner: AgentRunner
+    tasks: List[Task]
+    stats: SessionStats
+    cursor: int = 0
+    traces: List[TaskTrace] = dataclasses.field(default_factory=list)
+
+    def next_task(self) -> Optional[Task]:
+        if self.cursor >= len(self.tasks):
+            return None
+        t = self.tasks[self.cursor]
+        self.cursor += 1
+        return t
+
+
+@dataclasses.dataclass
+class EpisodeMetrics:
+    n_sessions: int
+    n_pods: int
+    n_tasks: int
+    makespan_s: float
+    throughput_tasks_per_s: float
+    mean_task_latency_s: float
+    p50_task_latency_s: float
+    p95_task_latency_s: float
+    total_stall_s: float
+    stall_per_task_s: float
+    stalled_loads: int
+    total_loads: int
+    local_hit_rate: float
+    pod_load_imbalance: float
+    cache_miss_replans: int
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class EpisodeResult:
+    metrics: EpisodeMetrics
+    sessions: List[Session]
+    router: PodLocalCacheRouter
+    contention: PodContention
+
+    def evaluate_answers(self) -> Report:
+        """Answer-quality aggregate over every session's tasks/traces
+        (independent of contention — time shifts, answers don't)."""
+        tasks = [t for s in self.sessions for t in s.tasks]
+        traces = [tr for s in self.sessions for tr in s.traces]
+        return evaluate(tasks, traces)
+
+
+def session_seed(seed: int, sid: int) -> int:
+    """Per-session derived seed. Additive so a 1-session engine started at
+    ``session_seed(seed, sid)`` replays exactly the workload/LLM stream of
+    session ``sid`` of an N-session episode (the determinism tests rely on
+    this). Answer traces replay bit-identically; *time and token* traces
+    may differ because read plans depend on the shared cache state other
+    sessions produce — that interaction is the scenario under test."""
+    return seed + sid
+
+
+class ConcurrentEpisodeEngine:
+    """Discrete-event execution of N agent sessions over one shared,
+    pod-sharded cache. See module docstring for the model."""
+
+    def __init__(self, n_sessions: int, *, n_pods: int = 4,
+                 capacity_per_pod: int = 5, model: str = "gpt-4-turbo",
+                 prompting: str = "cot", few_shot: bool = True,
+                 policy: str = "lru", llm_decisions: bool = True,
+                 latency: Optional[LatencyModel] = None, seed: int = 0):
+        assert n_sessions >= 1 and n_pods >= 1
+        self.n_sessions = n_sessions
+        self.n_pods = n_pods
+        self.profile = Profile(model, prompting, few_shot)
+        self.policy = policy
+        self.llm_decisions = llm_decisions
+        self.latency = latency or LatencyModel()
+        self.seed = seed
+        self.capacity_per_pod = capacity_per_pod
+
+        # shared infrastructure: datastore + pod-sharded cache. Pod caches
+        # use tick-order recency (no global wall clock exists across
+        # session-local clocks; scheduler order IS the global event order).
+        self.store = GeoDataStore(SimClock(self.latency))
+        self.pod_ids = [f"pod{i}" for i in range(n_pods)]
+        self.router = PodLocalCacheRouter(self.pod_ids,
+                                          capacity_per_pod=capacity_per_pod,
+                                          policy_name=policy)
+        self.contention = PodContention(self.pod_ids)
+
+    # -- session assembly ---------------------------------------------------
+    def _make_session(self, sid: int, n_tasks: int,
+                      reuse_rate: float) -> Session:
+        sseed = session_seed(self.seed, sid)
+        clock = SimClock(LatencyModel(**dataclasses.asdict(self.latency)))
+        llm = SimLLM(self.profile, seed=sseed)
+        stats = SessionStats()
+        controller = SharedCacheController(
+            self.router, rng=llm.rng,
+            decision_eps=self.profile.cache_eps if self.llm_decisions else 0.0)
+        registry = ToolRegistry(
+            make_shared_cache_tools(self.router, self.store, self.contention,
+                                    clock, stats)
+            + make_geo_tools(clock))
+        tasks = WorkloadSampler(reuse_rate, seed=sseed).sample(n_tasks)
+        compute_gold(tasks, self.store)
+        runner = AgentRunner(registry, controller, llm, clock, self.store,
+                             use_cache=True)
+        return Session(sid=sid, clock=clock, llm=llm, runner=runner,
+                       tasks=tasks, stats=stats)
+
+    # -- next-event loop ----------------------------------------------------
+    def run(self, tasks_per_session: int = 25,
+            reuse_rate: float = 0.8) -> EpisodeResult:
+        sessions = [self._make_session(sid, tasks_per_session, reuse_rate)
+                    for sid in range(self.n_sessions)]
+        heap = [(0.0, s.sid) for s in sessions]
+        heapq.heapify(heap)
+        while heap:
+            _, sid = heapq.heappop(heap)
+            s = sessions[sid]
+            task = s.next_task()
+            if task is None:
+                continue
+            s.traces.append(s.runner.run_task(task))
+            if s.cursor < len(s.tasks):
+                heapq.heappush(heap, (s.clock.now(), sid))
+        return EpisodeResult(metrics=self._metrics(sessions),
+                             sessions=sessions, router=self.router,
+                             contention=self.contention)
+
+    def _metrics(self, sessions: List[Session]) -> EpisodeMetrics:
+        lat = np.array([tr.time_s for s in sessions for tr in s.traces],
+                       np.float64)
+        n_tasks = int(lat.size)
+        makespan = max((s.clock.now() for s in sessions), default=0.0)
+        rstats = self.router.stats
+        return EpisodeMetrics(
+            n_sessions=self.n_sessions,
+            n_pods=self.n_pods,
+            n_tasks=n_tasks,
+            makespan_s=float(makespan),
+            throughput_tasks_per_s=(n_tasks / makespan if makespan else 0.0),
+            mean_task_latency_s=float(lat.mean()) if n_tasks else 0.0,
+            p50_task_latency_s=(float(np.percentile(lat, 50))
+                                if n_tasks else 0.0),
+            p95_task_latency_s=(float(np.percentile(lat, 95))
+                                if n_tasks else 0.0),
+            total_stall_s=self.contention.total_stall_s,
+            stall_per_task_s=(self.contention.total_stall_s / n_tasks
+                              if n_tasks else 0.0),
+            stalled_loads=self.contention.stalled_loads,
+            total_loads=self.contention.total_loads,
+            local_hit_rate=(rstats.local_hits / rstats.routed
+                            if rstats.routed else 0.0),
+            pod_load_imbalance=self.contention.load_imbalance(),
+            cache_miss_replans=sum(tr.cache_miss_replans
+                                   for s in sessions for tr in s.traces),
+        )
+
+
+def run_episode(n_sessions: int, tasks_per_session: int = 25, *,
+                n_pods: int = 4, reuse_rate: float = 0.8, seed: int = 0,
+                **engine_kw) -> EpisodeResult:
+    """One-call episode: build the engine, run it, return the result."""
+    eng = ConcurrentEpisodeEngine(n_sessions, n_pods=n_pods, seed=seed,
+                                  **engine_kw)
+    return eng.run(tasks_per_session, reuse_rate=reuse_rate)

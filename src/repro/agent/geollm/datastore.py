@@ -6,12 +6,25 @@ coordinates, detections, timestamps. ``GeoDataStore`` lazily materialises a
 deterministic frame per ``dataset-year`` key (~15k rows each across 8
 datasets x 9 years ~= 1.1M images, matching GeoLLM-Engine's catalog scale)
 and charges DB-load latency to the SimClock; cache reads are 5-10x cheaper.
+
+Performance model (this file is the data plane's hot path):
+
+* Filters return **lazy index views**: a view shares the parent's base
+  column arrays and holds only an int index into them. Columns gather on
+  first access (and memoise per view), so a ``detect`` step that touches
+  two of the nine columns never pays for the other seven. Values are
+  bit-identical to the old copy-all-columns implementation.
+* ``filter_bbox`` results are memoised per (frame, bbox). Root frames are
+  shared process-wide (see below), so the datastore effectively memoises
+  per (key, region) — the workload's universally-first filter.
+* Root frames are immutable and deterministic, so ``synth_frame`` keeps a
+  process-wide memo shared by every ``GeoDataStore`` (benchmark cells stop
+  re-synthesising the same 72 frames per cell).
 """
 from __future__ import annotations
 
-import dataclasses
 import hashlib
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -30,26 +43,86 @@ REGIONS = {
     "denver": (-105.10, 39.60, -104.80, 39.85),
 }
 
+COLUMNS = ("filename", "lon", "lat", "timestamp", "class_id", "det_count",
+           "land_cover", "cloud_pct")
+
 
 def all_keys() -> List[str]:
     return [f"{d}-{y}" for d in DATASETS for y in YEARS]
 
 
-@dataclasses.dataclass
+_ALL_KEYS = frozenset(all_keys())
+
+
 class GeoFrame:
-    """Columnar per-image metadata for one dataset-year."""
-    key: str
-    filename: np.ndarray      # (N,) str
-    lon: np.ndarray           # (N,) float32
-    lat: np.ndarray           # (N,) float32
-    timestamp: np.ndarray     # (N,) int64 (unix s)
-    class_id: np.ndarray      # (N,) int8  (dominant detection class)
-    det_count: np.ndarray     # (N,) int16 (objects of that class)
-    land_cover: np.ndarray    # (N,) int8
-    cloud_pct: np.ndarray     # (N,) float32
+    """Columnar per-image metadata for one dataset-year.
+
+    Construct with full column arrays (a *root* frame). Filters and sorts
+    return index views over the root's columns; views are immutable and may
+    be shared between callers (the bbox memo relies on this).
+    """
+
+    __slots__ = ("key", "_base", "_index", "_cols", "_bbox_memo")
+
+    def __init__(self, key: str, filename: np.ndarray, lon: np.ndarray,
+                 lat: np.ndarray, timestamp: np.ndarray,
+                 class_id: np.ndarray, det_count: np.ndarray,
+                 land_cover: np.ndarray, cloud_pct: np.ndarray):
+        self.key = key
+        self._base = {"filename": filename, "lon": lon, "lat": lat,
+                      "timestamp": timestamp, "class_id": class_id,
+                      "det_count": det_count, "land_cover": land_cover,
+                      "cloud_pct": cloud_pct}
+        self._index: Optional[np.ndarray] = None   # None -> root frame
+        self._cols: Dict[str, np.ndarray] = {}
+        self._bbox_memo: Dict[tuple, "GeoFrame"] = {}
+
+    # -- lazy columns --------------------------------------------------------
+    def _col(self, name: str) -> np.ndarray:
+        if self._index is None:
+            return self._base[name]
+        c = self._cols.get(name)
+        if c is None:
+            c = self._base[name][self._index]
+            self._cols[name] = c
+        return c
+
+    @property
+    def filename(self) -> np.ndarray:
+        return self._col("filename")
+
+    @property
+    def lon(self) -> np.ndarray:
+        return self._col("lon")
+
+    @property
+    def lat(self) -> np.ndarray:
+        return self._col("lat")
+
+    @property
+    def timestamp(self) -> np.ndarray:
+        return self._col("timestamp")
+
+    @property
+    def class_id(self) -> np.ndarray:
+        return self._col("class_id")
+
+    @property
+    def det_count(self) -> np.ndarray:
+        return self._col("det_count")
+
+    @property
+    def land_cover(self) -> np.ndarray:
+        return self._col("land_cover")
+
+    @property
+    def cloud_pct(self) -> np.ndarray:
+        return self._col("cloud_pct")
 
     def __len__(self) -> int:
-        return len(self.lon)
+        if self._index is not None:
+            return len(self._index)
+        return len(self._base["lon"])
 
     @property
     def size_bytes(self) -> int:
@@ -60,11 +133,30 @@ class GeoFrame:
     def size_mb(self) -> float:
         return self.size_bytes / 1e6
 
+    # -- views ---------------------------------------------------------------
+    def _take(self, idx: np.ndarray) -> "GeoFrame":
+        """Index view: idx positions are relative to *this* frame."""
+        view = object.__new__(GeoFrame)
+        view.key = self.key
+        view._base = self._base
+        view._index = idx if self._index is None else self._index[idx]
+        view._cols = {}
+        view._bbox_memo = {}
+        return view
+
+    def _mask(self, m: np.ndarray) -> "GeoFrame":
+        return self._take(np.flatnonzero(m))
+
     def filter_bbox(self, bbox) -> "GeoFrame":
-        x0, y0, x1, y1 = bbox
-        m = (self.lon >= x0) & (self.lon <= x1) & \
-            (self.lat >= y0) & (self.lat <= y1)
-        return self._mask(m)
+        bbox = tuple(bbox)
+        hit = self._bbox_memo.get(bbox)
+        if hit is None:
+            x0, y0, x1, y1 = bbox
+            lon, lat = self.lon, self.lat
+            m = (lon >= x0) & (lon <= x1) & (lat >= y0) & (lat <= y1)
+            hit = self._mask(m)
+            self._bbox_memo[bbox] = hit
+        return hit
 
     def filter_class(self, class_name: str) -> "GeoFrame":
         m = self.class_id == CLASSES.index(class_name)
@@ -73,19 +165,21 @@ class GeoFrame:
     def filter_clouds(self, max_pct: float) -> "GeoFrame":
         return self._mask(self.cloud_pct <= max_pct)
 
-    def _mask(self, m: np.ndarray) -> "GeoFrame":
-        return GeoFrame(self.key, self.filename[m], self.lon[m], self.lat[m],
-                        self.timestamp[m], self.class_id[m],
-                        self.det_count[m], self.land_cover[m],
-                        self.cloud_pct[m])
-
 
 def _seed_for(key: str) -> int:
     return int.from_bytes(hashlib.blake2b(key.encode(),
                                           digest_size=4).digest(), "big")
 
 
+# process-wide root-frame memo: synth_frame is deterministic and frames are
+# immutable, so every datastore/benchmark cell can share one instance per key
+_FRAME_MEMO: Dict[str, GeoFrame] = {}
+
+
 def synth_frame(key: str) -> GeoFrame:
+    cached = _FRAME_MEMO.get(key)
+    if cached is not None:
+        return cached
     rng = np.random.default_rng(_seed_for(key))
     dataset, year = key.rsplit("-", 1)
     n = int(rng.integers(12_000, 18_000))
@@ -97,15 +191,17 @@ def synth_frame(key: str) -> GeoFrame:
     lat = (centers[which, 1] + rng.normal(0, 0.12, n)).astype(np.float32)
     t0 = np.datetime64(f"{year}-01-01").astype("datetime64[s]").astype(np.int64)
     ts = t0 + rng.integers(0, 365 * 24 * 3600, n)
-    return GeoFrame(
+    frame = GeoFrame(
         key=key,
-        filename=np.array([f"{dataset}_{year}_{i:06d}.tif" for i in range(n)]),
+        filename=np.char.mod(f"{dataset}_{year}_%06d.tif", np.arange(n)),
         lon=lon, lat=lat, timestamp=ts,
         class_id=rng.integers(0, len(CLASSES), n).astype(np.int8),
         det_count=rng.integers(0, 40, n).astype(np.int16),
         land_cover=rng.integers(0, len(LAND_COVERS), n).astype(np.int8),
         cloud_pct=rng.uniform(0, 100, n).astype(np.float32),
     )
+    _FRAME_MEMO[key] = frame
+    return frame
 
 
 class GeoDataStore:
@@ -114,15 +210,12 @@ class GeoDataStore:
 
     def __init__(self, clock):
         self.clock = clock
-        self._frames: Dict[str, GeoFrame] = {}
         self.loads = 0
 
     def _frame(self, key: str) -> GeoFrame:
-        if key not in self._frames:
-            if key not in set(all_keys()):
-                raise KeyError(f"unknown dataset-year {key!r}")
-            self._frames[key] = synth_frame(key)
-        return self._frames[key]
+        if key not in _ALL_KEYS:
+            raise KeyError(f"unknown dataset-year {key!r}")
+        return synth_frame(key)
 
     def load(self, key: str) -> GeoFrame:
         f = self._frame(key)

@@ -104,11 +104,7 @@ def sample_images(frame, k: int = 5) -> List[str]:
 
 def sort_by_time(frame) -> GeoFrame:
     f = _require_frame(frame)
-    order = np.argsort(f.timestamp, kind="stable")
-    return f._mask(np.zeros(len(f), bool)) if len(f) == 0 else GeoFrame(
-        f.key, f.filename[order], f.lon[order], f.lat[order],
-        f.timestamp[order], f.class_id[order], f.det_count[order],
-        f.land_cover[order], f.cloud_pct[order])
+    return f._take(np.argsort(f.timestamp, kind="stable"))
 
 
 def merge_frames(frame_a, frame_b) -> GeoFrame:

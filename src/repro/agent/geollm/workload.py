@@ -13,10 +13,13 @@ import dataclasses
 import random
 from typing import Any, Dict, List, Optional
 
+import numpy as np
+
 from repro.agent.geollm.datastore import (
     CLASSES,
     REGIONS,
     GeoDataStore,
+    GeoFrame,
     all_keys,
 )
 from repro.agent.geollm import geotools
@@ -185,6 +188,37 @@ def compute_gold(tasks: List[Task], store: GeoDataStore) -> None:
             s.gold = execute_plan(s, env)
 
 
+def answers_equal(a: Any, b: Any) -> bool:
+    """Structural equality over the answer value domain (dicts, sequences,
+    scalars, numpy arrays, GeoFrames). Unlike ``repr`` comparison, numpy's
+    print truncation cannot mask a real mismatch in a large array."""
+    if a is b:
+        return True
+    if isinstance(a, GeoFrame) or isinstance(b, GeoFrame):
+        if not (isinstance(a, GeoFrame) and isinstance(b, GeoFrame)):
+            return False
+        return (a.key == b.key and len(a) == len(b)
+                and all(np.array_equal(getattr(a, c), getattr(b, c))
+                        for c in ("filename", "lon", "lat", "timestamp",
+                                  "class_id", "det_count", "land_cover",
+                                  "cloud_pct")))
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return (np.asarray(a).shape == np.asarray(b).shape
+                and np.array_equal(a, b))
+    if isinstance(a, dict) and isinstance(b, dict):
+        return (a.keys() == b.keys()
+                and all(answers_equal(v, b[k]) for k, v in a.items()))
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return (len(a) == len(b)
+                and all(answers_equal(x, y) for x, y in zip(a, b)))
+    if isinstance(a, bool) or isinstance(b, bool):
+        return a == b and isinstance(a, bool) == isinstance(b, bool)
+    if isinstance(a, (int, float, np.integer, np.floating)) and \
+            isinstance(b, (int, float, np.integer, np.floating)):
+        return float(a) == float(b)
+    return type(a) is type(b) and a == b
+
+
 def model_check(tasks: List[Task], store: GeoDataStore) -> List[int]:
     """Paper §IV: 'use the model-checker module to verify the functional
     correctness of the generated tasks'. Returns ids of BROKEN tasks."""
@@ -195,7 +229,7 @@ def model_check(tasks: List[Task], store: GeoDataStore) -> List[int]:
             for s in t.steps:
                 a = execute_plan(s, env)
                 if a is None or (s.gold is not None and
-                                 repr(a) != repr(s.gold)):
+                                 not answers_equal(a, s.gold)):
                     raise ValueError(f"step gold mismatch in task {t.tid}")
         except Exception:
             bad.append(t.tid)

@@ -36,6 +36,8 @@ class PodLocalCacheRouter:
     def __init__(self, pod_ids: List[str], capacity_per_pod: int = 5,
                  policy_name: str = "lru",
                  clock: Optional[Callable[[], float]] = None):
+        self._clock = clock
+        self._policy_name = policy_name
         self.pods: Dict[str, DataCache] = {
             p: DataCache(capacity_per_pod, clock) for p in pod_ids}
         self.policies: Dict[str, Policy] = {
@@ -46,9 +48,12 @@ class PodLocalCacheRouter:
     # -- membership ----------------------------------------------------------
     def fail_pod(self, pod_id: str):
         """Simulated pod failure: its cache contents are lost; its key range
-        re-routes deterministically to survivors (rendezvous property)."""
+        re-routes deterministically to survivors (rendezvous property). The
+        rebuilt cache keeps the router's clock so the restored pod stays on
+        simulated time (recency metadata stays comparable across pods)."""
         self.alive[pod_id] = False
-        self.pods[pod_id] = DataCache(self.pods[pod_id].capacity)
+        self.pods[pod_id] = DataCache(self.pods[pod_id].capacity, self._clock)
+        self.policies[pod_id] = make_policy(self._policy_name)
         self.stats.failovers += 1
 
     def restore_pod(self, pod_id: str):
@@ -64,6 +69,18 @@ class PodLocalCacheRouter:
             raise RuntimeError("no live pods")
         return max(live, key=lambda p: _score(key, p))
 
+    def install(self, pod: str, key: str, value: object, size_bytes: int):
+        """Install a loaded value into ``pod``'s cache, evicting per the
+        pod's policy when full (shared by ``fetch`` and the concurrent
+        engine's load path, so eviction semantics cannot diverge)."""
+        cache = self.pods[pod]
+        if key in cache:
+            return
+        victim = None
+        if len(cache) >= cache.capacity:
+            victim = self.policies[pod].victim(cache.entries())
+        cache.put(key, value, size_bytes, victim=victim)
+
     def fetch(self, key: str, loader: Callable[[str], object],
               size_of: Callable[[object], int]):
         """Route to the owning pod; hit its local cache or load+install."""
@@ -75,10 +92,7 @@ class PodLocalCacheRouter:
             return cache.get(key), pod, True
         self.stats.remote_loads += 1
         value = loader(key)
-        victim = None
-        if len(cache) >= cache.capacity:
-            victim = self.policies[pod].victim(cache.entries())
-        cache.put(key, value, size_of(value), victim=victim)
+        self.install(pod, key, value, size_of(value))
         # install counts as first access
         return cache.get(key), pod, False
 

@@ -22,7 +22,33 @@ from typing import Any, Dict, List, Optional
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:                                   # zstd is optional; zlib ships with
+    import zstandard                   # CPython and keeps checkpoints
+except ImportError:                    # readable on minimal images
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+class _ZlibCompressor:
+    def __init__(self, level: int = 6):
+        self.level = level
+
+    def compress(self, data: bytes) -> bytes:
+        import zlib
+        return zlib.compress(data, self.level)
+
+
+def _decompress(blob: bytes) -> bytes:
+    """Codec-sniffing decompress so repos written with either codec restore."""
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "zstandard module is unavailable")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    import zlib
+    return zlib.decompress(blob)
 
 
 def _tree_to_records(tree) -> List[Dict[str, Any]]:
@@ -67,8 +93,8 @@ class Checkpointer:
         self.n_shards = n_shards
         os.makedirs(directory, exist_ok=True)
         self._async_thread: Optional[threading.Thread] = None
-        self._zc = zstandard.ZstdCompressor(level=3)
-        self._zd = zstandard.ZstdDecompressor()
+        self._zc = (zstandard.ZstdCompressor(level=3)
+                    if zstandard is not None else _ZlibCompressor(6))
 
     # -- paths ---------------------------------------------------------------
     def _step_dir(self, step: int) -> str:
@@ -156,7 +182,7 @@ class Checkpointer:
             if not name.endswith(".ckpt"):
                 continue
             recs = msgpack.unpackb(
-                self._zd.decompress(open(os.path.join(d, name), "rb").read()),
+                _decompress(open(os.path.join(d, name), "rb").read()),
                 raw=False)
             leaves.update(_records_to_leaves(recs))
         if like is None:

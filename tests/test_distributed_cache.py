@@ -57,6 +57,22 @@ def test_failed_pod_cache_is_cold():
     assert hit is False                      # contents were lost
 
 
+def test_failed_pod_rebuild_keeps_router_clock():
+    """Regression: fail_pod used to rebuild the pod's DataCache without the
+    router's clock, detaching the restored pod from simulated time."""
+    t = {"now": 100.0}
+    r = PodLocalCacheRouter(["pod0", "pod1"], capacity_per_pod=3,
+                            clock=lambda: t["now"])
+    r.fetch("a-2020", LOADER, SIZE)
+    dead = r.owner("a-2020")
+    r.fail_pod(dead)
+    r.restore_pod(dead)
+    t["now"] = 500.0
+    r.fetch("a-2020", LOADER, SIZE)
+    e = r.pods[r.owner("a-2020")].entries()["a-2020"]
+    assert e.created_at >= 500.0       # rebuilt cache still sees sim time
+
+
 def test_summary_shape():
     r = mk(2)
     r.fetch("a-2020", LOADER, SIZE)

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the dCache invariants."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.cache import DataCache
 from repro.core.distributed_cache import PodLocalCacheRouter
