@@ -77,6 +77,9 @@ def main() -> None:
     section("concurrency", "Concurrency (N sessions on the shared pod cache)",
             tables.table_concurrency, tasks_per_session=conc_tasks,
             parallel=par)
+    section("prefetch", "Async prefetch (lazy vs plan-time pod loads)",
+            tables.table_prefetch, tasks_per_session=conc_tasks,
+            parallel=par)
     section("belady", "Beyond-paper: Belady oracle bound",
             tables.belady_bound, n=n23)
 
@@ -101,6 +104,9 @@ def main() -> None:
         conc_rows = by_id.get("concurrency", [])
         conc = [r.split(",") for r in conc_rows if r.startswith("concurrency")]
         conc_max = max(conc, key=lambda c: int(c[1])) if conc else None
+        pf_rows = [r.split(",") for r in by_id.get("prefetch", [])
+                   if r.startswith("prefetch,") and r.split(",")[2] == "prefetch"]
+        pf_max = max(pf_rows, key=lambda c: int(c[1])) if pf_rows else None
         record = {
             "schema": "bench_dcache/v1",
             "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -125,6 +131,12 @@ def main() -> None:
                                               if conc_max else None),
                 "concurrency_local_hit_pct": (float(conc_max[13])
                                               if conc_max else None),
+                "prefetch_max_sessions": (int(pf_max[1]) if pf_max else None),
+                "prefetch_p95_latency_s": (float(pf_max[4])
+                                           if pf_max else None),
+                "prefetch_p95_speedup": (float(pf_max[13])
+                                         if pf_max else None),
+                "prefetch_overlap_s": (float(pf_max[11]) if pf_max else None),
             },
         }
         with open(args.json, "w") as f:

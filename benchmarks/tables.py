@@ -166,6 +166,44 @@ def table_concurrency(tasks_per_session: int = 25,
     return rows
 
 
+def table_prefetch(tasks_per_session: int = 25,
+                   sessions: Sequence[int] = (1, 4, 8, 16),
+                   n_pods: int = 8, parallel: bool = False) -> List[str]:
+    """Beyond-paper: lazy vs async-prefetch data plane on the event-granular
+    engine. ``prefetch`` issues a session's planned ``load_db`` keys the
+    moment its ReadPlan lands, overlapping DB service with the planning LLM
+    round; ``lazy`` loads each key on demand after planning. Same seeds,
+    same answers — only time moves. ``p95_speedup`` is lazy/prefetch p95
+    task latency; ``overlap_s`` is DB service hidden behind LLM work.
+
+    Default is 8 pods (sessions:pods <= 2:1, the paper's many-endpoint
+    regime): there prefetch strictly reduces p50 AND p95 at every N. Past
+    ~4:1 oversubscription pods saturate and no issue-order policy can win
+    the tail — admission control (see the engine's prefetcher) then degrades
+    prefetch to lazy loading rather than fattening p95."""
+    rows = ["table,n_sessions,mode,p50_s,p95_s,mean_s,stall_total_s,"
+            "stalled_loads,pf_issued,pf_hits,pf_wait_s,overlap_s,"
+            "joined_loads,p95_speedup"]
+    cells = [lambda ns=ns, pf=pf: run_episode(ns, tasks_per_session,
+                                              n_pods=n_pods, seed=0,
+                                              prefetch=pf)
+             for ns in sessions for pf in (False, True)]
+    results = _run_cells(cells, parallel)
+    for i, ns in enumerate(sessions):
+        lazy, pf = results[2 * i].metrics, results[2 * i + 1].metrics
+        for mode, m, sp in (("lazy", lazy, ""),
+                            ("prefetch", pf,
+                             f"{lazy.p95_task_latency_s / pf.p95_task_latency_s:.3f}")):
+            rows.append(
+                f"prefetch,{ns},{mode},{m.p50_task_latency_s:.3f},"
+                f"{m.p95_task_latency_s:.3f},{m.mean_task_latency_s:.3f},"
+                f"{m.total_stall_s:.3f},{m.stalled_loads},"
+                f"{m.prefetch_issued},{m.prefetch_hits},"
+                f"{m.prefetch_wait_s:.3f},{m.overlap_credit_s:.3f},"
+                f"{m.joined_loads},{sp}")
+    return rows
+
+
 def belady_bound(n: int = 200, parallel: bool = False) -> List[str]:
     """Beyond-paper: Belady/MIN oracle as the eviction upper bound.
 

@@ -1,20 +1,32 @@
 """Tool-augmented agent loop (CoT / ReAct, zero- and few-shot).
 
 Execution pattern per task:
-  1. planning LLM round(s) — CoT plans once; ReAct interleaves a round per
+  1. read planning — the cache controller plans read_cache vs load_db per
+     required key *up front* (the decision rides the planning round, paper:
+     "seamlessly integrating with existing function-calling mechanisms");
+     the :attr:`AgentRunner.on_plan` hook fires here, which is where the
+     concurrent engine's async prefetcher overlaps pod loads with the
+     planning round (docs/architecture.md);
+  2. planning LLM round(s) — CoT plans once; ReAct interleaves a round per
      tool call (token/latency accounting follows the prompting style);
-  2. data acquisition — the cache controller plans read_cache vs load_db
-     per required key; a cache MISS is a failed tool call that triggers a
-     re-plan round (paper: the LLM "reassesses its tool sequence");
-  3. step execution over the tool registry with the SimLLM's calibrated
+  3. data acquisition — executes the read plan; a cache MISS is a failed
+     tool call that triggers a re-plan round (paper: the LLM "reassesses
+     its tool sequence");
+  4. step execution over the tool registry with the SimLLM's calibrated
      tool-error injections (erroneous call -> error result -> retry);
-  4. cache update — prompt-driven (LLM) or programmatic, per controller;
-  5. final answer round.
+  5. cache update — prompt-driven (LLM) or programmatic, per controller;
+  6. final answer round.
+
+The loop is written as a generator (:meth:`AgentRunner.iter_task`) that
+yields control after every simulated-clock advance (LLM round, tool call,
+pod load), so a discrete-event scheduler can interleave many sessions with
+*exact* global time ordering. :meth:`AgentRunner.run_task` simply drains
+the generator — the single-session path is bit-identical to the plain loop.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.agent.backends import SimLLM
 from repro.agent.geollm import geotools
@@ -47,14 +59,25 @@ class TaskTrace:
 
 
 class AgentRunner:
+    """Drives one agent session.
+
+    ``on_plan`` is the plan-time hook: called as ``on_plan(task, plan)`` the
+    moment the :class:`~repro.core.controller.ReadPlan` lands — *before* the
+    planning LLM round is charged — so a scheduler can issue asynchronous
+    pod loads that overlap the round's latency (the concurrent engine's
+    prefetcher). ``None`` (the default) keeps the plain lazy-loading path.
+    """
+
     def __init__(self, registry: ToolRegistry, controller, llm: SimLLM,
-                 clock, datastore, use_cache: bool = True):
+                 clock, datastore, use_cache: bool = True,
+                 on_plan: Optional[Callable[[Task, Any], None]] = None):
         self.registry = registry
         self.controller = controller
         self.llm = llm
         self.clock = clock
         self.store = datastore
         self.use_cache = use_cache
+        self.on_plan = on_plan
 
     # -- latency/token helpers ------------------------------------------------
     def _llm_round(self, prompt_tokens: int, completion_tokens: int) -> int:
@@ -63,7 +86,10 @@ class AgentRunner:
         return prompt_tokens + completion_tokens
 
     # -- acquisition ----------------------------------------------------------
-    def _acquire(self, task: Task, env: Dict[str, Any], trace: TaskTrace):
+    def _acquire(self, task: Task, env: Dict[str, Any], trace: TaskTrace,
+                 plan):
+        """Generator: executes the read plan, yielding after every clock
+        advance. Returns the list of keys acquired via ``load_db``."""
         keys = task.required_keys
         loads: List[str] = []
         if not self.use_cache:
@@ -72,9 +98,9 @@ class AgentRunner:
                 assert res.ok, res.error
                 env[_frame_var(k)] = res.value
                 trace.tool_calls += 1
+                yield
             return loads
 
-        plan = self.controller.plan_reads(task.query, keys)
         if isinstance(self.controller, LLMController) and plan.prompt_tokens:
             # the read decision rides the existing planning round (paper:
             # "seamlessly integrating with existing function-calling
@@ -87,10 +113,12 @@ class AgentRunner:
                 plan.prompt_tokens * lat.llm_prefill_s_per_tok
                 + 5 * lat.llm_decode_s_per_tok)
             trace.tokens += plan.prompt_tokens + plan.completion_tokens
+            yield
         for k in keys:
             choice = plan.choices[k]
             res = self.registry.call(choice, clock=self.clock, key=k)
             trace.tool_calls += 1
+            yield
             if not res.ok:
                 # cache miss (or bad decision): the failed call's error
                 # message returns in-round; the LLM corrects its tool choice
@@ -101,9 +129,11 @@ class AgentRunner:
                 self.clock.advance(900 * lat.llm_prefill_s_per_tok
                                    + 25 * lat.llm_decode_s_per_tok)
                 trace.tokens += 925
+                yield
                 res = self.registry.call("load_db", clock=self.clock, key=k)
                 trace.tool_calls += 1
                 assert res.ok, res.error
+                yield
             if choice == "load_db" or not res.ok:
                 loads.append(k)
             env[_frame_var(k)] = res.value
@@ -112,12 +142,15 @@ class AgentRunner:
 
     # -- step execution ---------------------------------------------------------
     def _run_step(self, step: Step, env: Dict[str, Any], trace: TaskTrace,
-                  react: bool, prompt_tokens: int) -> Any:
+                  react: bool, prompt_tokens: int):
+        """Generator: executes one step's tool plan, yielding after every
+        clock advance. Returns the step's answer value."""
         local = dict(env)
         answer = None
         if react:  # one thought/action round per step
             trace.tokens += self._llm_round(
                 prompt_tokens, PLAN_COMPLETION_TOKENS["react"])
+            yield
         for call in step.plan:
             # erroneous attempts (hallucinated tool / bad args) precede the
             # correct call; the error round-trip is folded into the round
@@ -131,6 +164,7 @@ class AgentRunner:
                     for k, v in call.args.items()}
             res = self.registry.call(call.name, clock=self.clock, **args)
             trace.tool_calls += 1
+            yield
             if not res.ok:
                 trace.bad_calls += 1
                 continue
@@ -140,9 +174,17 @@ class AgentRunner:
                 answer = res.value
         return answer
 
-
     # -- full task ----------------------------------------------------------
-    def run_task(self, task: Task) -> TaskTrace:
+    def iter_task(self, task: Task):
+        """Run one task as a generator yielding after every clock advance.
+
+        The yields are the discrete-event scheduler's interleave points: a
+        session is resumed only while its clock is the global minimum, so
+        every shared-state operation between two yields (cache read/install,
+        pod-load arbitration, read-plan decision) executes in exact global
+        time order. The generator's return value (via ``StopIteration``) is
+        the finished :class:`TaskTrace`.
+        """
         t0 = self.clock.now()
         trace = TaskTrace(tid=task.tid, success=True, time_s=0.0, tokens=0,
                           tool_calls=0, bad_calls=0, cache_miss_replans=0,
@@ -152,17 +194,31 @@ class AgentRunner:
         plan_tokens = (PLAN_PROMPT_TOKENS_FS if prof.few_shot
                        else PLAN_PROMPT_TOKENS)[prof.prompting]
 
+        # read planning happens up front (it rides the planning round): the
+        # decisions are fixed here, but their latency/token accounting stays
+        # where it always was (inside _acquire), so single-session traces
+        # are unchanged. The on_plan hook lets a scheduler start the planned
+        # loads NOW, overlapping them with the planning round below.
+        plan = None
+        if self.use_cache:
+            plan = self.controller.plan_reads(task.query, task.required_keys)
+            if self.on_plan is not None:
+                self.on_plan(task, plan)
+
         if not react:  # CoT: single planning round over the full task
             trace.tokens += self._llm_round(
                 plan_tokens + STEP_SUMMARY_TOKENS * len(task.steps),
                 PLAN_COMPLETION_TOKENS["cot"])
+            yield
 
         env: Dict[str, Any] = {}
-        loads = self._acquire(task, env, trace)
+        loads = yield from self._acquire(task, env, trace, plan)
 
         task_failed = self.llm.draw_task_failure()
         for i, step in enumerate(task.steps):
-            ans = self._run_step(step, env, trace, react, plan_tokens)
+            ans = yield from self._run_step(env=env, step=step, trace=trace,
+                                            react=react,
+                                            prompt_tokens=plan_tokens)
             if self.llm.draw_step_corruption(step.kind):
                 ans = _corrupt(ans, self.llm)
             trace.answers[i] = ans
@@ -189,7 +245,17 @@ class AgentRunner:
                                         FINAL_COMPLETION_TOKENS)
         trace.time_s = self.clock.now() - t0
         trace.success = not task_failed
+        yield
         return trace
+
+    def run_task(self, task: Task) -> TaskTrace:
+        """Synchronous execution: drain :meth:`iter_task` to completion."""
+        gen = self.iter_task(task)
+        while True:
+            try:
+                next(gen)
+            except StopIteration as stop:
+                return stop.value
 
 
 def _corrupt(ans: Any, llm: SimLLM):

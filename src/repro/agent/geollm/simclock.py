@@ -1,14 +1,22 @@
-"""Deterministic latency accounting.
+"""Deterministic latency accounting + discrete-event queue helpers.
 
 The paper measures wall-clock on an Azure deployment with hundreds of GPT
 endpoints. Offline we account *modeled* latency on a deterministic clock so
 every benchmark is exactly reproducible; constants are calibrated so that
 absolute per-task times land in the paper's 5-7 s range and the cache-vs-DB
 ratio is in the paper's 5-10x band (DESIGN §9).
+
+:class:`EventQueue` is the scheduling primitive behind the event-granular
+concurrent engine (``repro.agent.concurrency``): a time-ordered heap with a
+deterministic total order — (time, priority, tiebreak) — so simulations are
+bit-reproducible regardless of heap internals. See docs/architecture.md for
+the determinism contract.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
+from typing import Any, Iterator, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -51,3 +59,75 @@ class SimClock:
         assert seconds >= 0.0, seconds
         self._t += seconds
         return self._t
+
+    def advance_to(self, t: float) -> float:
+        """Advance to absolute time ``t`` (no-op if already past it)."""
+        if t > self._t:
+            self._t = t
+        return self._t
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event queue
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One scheduled event.
+
+    Ordering is (time, priority, tiebreak): lower priority values run first
+    at equal times (e.g. pod-load completions *before* session resumes, so a
+    session resuming exactly at a load's completion time observes the key
+    already installed), and ``tiebreak`` (session id, or an insertion
+    sequence number) makes the order total and deterministic.
+    """
+    time: float
+    priority: int
+    tiebreak: int
+    payload: Any = None
+
+    def sort_key(self) -> Tuple[float, int, int]:
+        return (self.time, self.priority, self.tiebreak)
+
+
+class EventQueue:
+    """Deterministic time-ordered event heap for discrete-event simulation.
+
+    ``push``/``pop`` are O(log n); the pop order is the total order defined
+    by :meth:`Event.sort_key`, never heap insertion order, so simulations
+    driven off this queue are bit-reproducible.
+    """
+
+    def __init__(self) -> None:
+        # heap keys carry the insertion sequence as a final component so
+        # events with identical (time, priority, tiebreak) never fall
+        # through to comparing Event objects (which have no ordering)
+        self._heap: List[Tuple[Tuple[float, int, int, int], Event]] = []
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def push(self, time: float, priority: int = 0,
+             tiebreak: Optional[int] = None, payload: Any = None) -> Event:
+        if tiebreak is None:
+            tiebreak = self._seq
+        ev = Event(time, priority, tiebreak, payload)
+        heapq.heappush(self._heap, (ev.sort_key() + (self._seq,), ev))
+        self._seq += 1
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[1]
+
+    def peek(self) -> Event:
+        return self._heap[0][1]
+
+    def drain(self) -> Iterator[Event]:
+        """Pop events in order until the queue is empty (events pushed
+        while draining are sequenced into the same order)."""
+        while self._heap:
+            yield self.pop()

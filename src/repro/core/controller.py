@@ -24,10 +24,22 @@ from repro.core.prompts import (
 
 @dataclasses.dataclass
 class ReadPlan:
-    """Per-key tool choice ("read_cache" | "load_db")."""
+    """Per-key tool choice ("read_cache" | "load_db").
+
+    A ReadPlan "lands" at plan time — before the planning LLM round is
+    charged (see ``AgentRunner.iter_task``). Schedulers subscribe to that
+    moment via the runner's ``on_plan`` hook and may start the
+    :meth:`load_keys` asynchronously, overlapping DB service with the
+    planning round (the concurrent engine's prefetcher does exactly this).
+    """
     choices: Dict[str, str]
     prompt_tokens: int = 0
     completion_tokens: int = 0
+
+    def load_keys(self) -> List[str]:
+        """Keys this plan will acquire via ``load_db``, in plan order —
+        the prefetcher's work list."""
+        return [k for k, c in self.choices.items() if c == "load_db"]
 
 
 class ProgrammaticController:

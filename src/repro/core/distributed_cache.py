@@ -6,6 +6,15 @@ localized cache becomes a *sharded* cache: each pod owns a partition of the
 pod affinity, so a key's data is cached on exactly one pod and reuse
 concentrates there. Pod failure triggers deterministic re-partitioning
 (elastic), and the remaining pods absorb the failed pod's keys.
+
+Loads can be **asynchronous**: :meth:`PodLocalCacheRouter.start_load`
+registers an in-flight load with its simulated completion time (the
+concurrent engine's prefetcher and demand loads both use it), and
+:meth:`PodLocalCacheRouter.finish_load` installs the value into the owning
+pod's cache when the simulation reaches that time. While a load is in
+flight, sessions needing the same key *join* it (wait for the existing
+completion) instead of issuing a duplicate DB load. See
+docs/architecture.md for the full data flow.
 """
 from __future__ import annotations
 
@@ -24,10 +33,37 @@ def _score(key: str, pod: str) -> int:
 
 @dataclasses.dataclass
 class RoutingStats:
+    """Logical-access accounting (one increment of ``routed`` per session
+    data access) plus physical prefetch issuance.
+
+    Invariant: ``routed == local_hits + remote_loads + joined_in_flight``.
+    ``prefetch_issued`` counts physical loads started by a prefetcher; they
+    are *not* logical accesses (the later consume is, and lands in one of
+    the three buckets above — usually ``joined_in_flight`` or
+    ``local_hits``).
+    """
     routed: int = 0
     local_hits: int = 0
     remote_loads: int = 0
     failovers: int = 0
+    joined_in_flight: int = 0
+    prefetch_issued: int = 0
+
+
+@dataclasses.dataclass
+class InFlightLoad:
+    """A DB load that has been issued but whose (simulated) service has not
+    completed yet. ``completes_at`` is the absolute sim time at which the
+    value lands in the owning pod's cache."""
+    key: str
+    pod: str
+    issued_at: float
+    completes_at: float
+    value: object
+    size_bytes: int
+    prefetched: bool = False
+    joiners: int = 0
+    credited: bool = False    # overlap credited (once per physical load)
 
 
 class PodLocalCacheRouter:
@@ -44,6 +80,7 @@ class PodLocalCacheRouter:
             p: make_policy(policy_name) for p in pod_ids}
         self.alive: Dict[str, bool] = {p: True for p in pod_ids}
         self.stats = RoutingStats()
+        self.in_flight: Dict[str, InFlightLoad] = {}
 
     # -- membership ----------------------------------------------------------
     def fail_pod(self, pod_id: str):
@@ -80,6 +117,35 @@ class PodLocalCacheRouter:
         if len(cache) >= cache.capacity:
             victim = self.policies[pod].victim(cache.entries())
         cache.put(key, value, size_bytes, victim=victim)
+
+    # -- async completion -----------------------------------------------------
+    def start_load(self, key: str, value: object, size_bytes: int, *,
+                   issued_at: float, completes_at: float,
+                   prefetched: bool = False) -> InFlightLoad:
+        """Register an in-flight load of ``key`` on its owning pod.
+
+        The caller has already arbitrated pod bandwidth (``completes_at``
+        reflects any queueing); until :meth:`finish_load` runs, the key is
+        neither cached nor loadable again — sessions that need it join this
+        record instead of re-issuing the DB load.
+        """
+        assert key not in self.in_flight, f"{key} already in flight"
+        rec = InFlightLoad(key=key, pod=self.owner(key), issued_at=issued_at,
+                           completes_at=completes_at, value=value,
+                           size_bytes=size_bytes, prefetched=prefetched)
+        self.in_flight[key] = rec
+        if prefetched:
+            self.stats.prefetch_issued += 1
+        return rec
+
+    def finish_load(self, key: str) -> InFlightLoad:
+        """Complete an in-flight load: install the value into the owning
+        pod's cache (evicting per policy). Called by the discrete-event
+        scheduler when sim time reaches ``completes_at``."""
+        rec = self.in_flight.pop(key)
+        if self.alive.get(rec.pod, False):
+            self.install(rec.pod, rec.key, rec.value, rec.size_bytes)
+        return rec
 
     def fetch(self, key: str, loader: Callable[[str], object],
               size_of: Callable[[object], int]):

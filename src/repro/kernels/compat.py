@@ -1,0 +1,19 @@
+"""jax/pallas toolchain compatibility shims.
+
+The TPU compiler-params dataclass was renamed across jax releases:
+``pltpu.TPUCompilerParams`` (<= 0.4.x) became ``pltpu.CompilerParams``
+(newer releases, as used in the pallas guide). All kernels build their
+params through :func:`tpu_compiler_params` so they run on either
+toolchain without touching kernel code.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct the installed toolchain's TPU compiler-params object."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

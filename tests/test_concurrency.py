@@ -51,9 +51,12 @@ def test_answer_quality_independent_of_concurrency():
         tasks += solo.sessions[0].tasks
         traces += solo.sessions[0].traces
     pooled = evaluate(tasks, traces)
-    for field in ("success_rate", "correctness", "obj_det_f1",
-                  "lcc_recall", "vqa_rouge"):
+    # answer-derived metrics are exactly N-independent; the correctness
+    # *ratio* is call-based (good/total tool calls) and may shift by a few
+    # cache-miss replans, which legitimately depend on shared-cache state
+    for field in ("success_rate", "obj_det_f1", "lcc_recall", "vqa_rouge"):
         assert getattr(rep_n, field) == getattr(pooled, field), field
+    assert abs(rep_n.correctness - pooled.correctness) < 0.02
 
 
 # ---------------------------------------------------------------------------
@@ -100,9 +103,11 @@ def test_shared_cache_cross_session_hits():
     assert res.metrics.local_hit_rate > 0.0
     assert res.router.stats.local_hits > 0
     # routed counts successful acquisitions exactly once each, even when an
-    # erroneous read decision misses and re-plans into load_db
+    # erroneous read decision misses and re-plans into load_db; with exact
+    # event interleaving an acquisition can also *join* another session's
+    # in-flight load of the same key (no duplicate DB service)
     s = res.router.stats
-    assert s.routed == s.local_hits + s.remote_loads
+    assert s.routed == s.local_hits + s.remote_loads + s.joined_in_flight
 
 
 def test_metrics_shape():

@@ -41,6 +41,8 @@ def test_lower_compile_cell(arch, kind):
     compiled = _lower_cell(cfg, SMALL_SHAPES[kind], mesh11(),
                            single_pod_rules())
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+        cost = cost[0]
     assert float(cost.get("flops", 0)) > 0
     assert isinstance(collective_bytes(compiled.as_text()), dict)
 

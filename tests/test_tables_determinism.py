@@ -1,0 +1,34 @@
+"""Determinism contract for the paper tables (docs/architecture.md).
+
+Tables I-III are bit-stable across runs, machines, and refactors of the
+scheduling machinery: the agent loop's generator conversion (ISSUE 2) kept
+every RNG draw and every clock-advance in its original order, so the digests
+below — captured from the PR-1 code — must keep matching. If a PR changes
+them *intentionally* (a modeling change), update the digests and say so in
+CHANGES.md; an accidental drift is a regression.
+"""
+import hashlib
+
+from benchmarks import tables
+
+
+def _digest(rows) -> str:
+    return hashlib.sha256(repr(rows).encode()).hexdigest()[:16]
+
+
+# captured from the PR-1 code at the reduced sizes below
+TABLE1_N40_DIGEST = "4a16fa741c2ec0e3"
+TABLE2_N30_DIGEST = "c843260e9b690452"
+TABLE3_N30_DIGEST = "4932ee22ebf094a7"
+
+
+def test_table1_bit_stable():
+    assert _digest(tables.table1(n=40)) == TABLE1_N40_DIGEST
+
+
+def test_table2_bit_stable():
+    assert _digest(tables.table2(n=30)) == TABLE2_N30_DIGEST
+
+
+def test_table3_bit_stable():
+    assert _digest(tables.table3(n=30)) == TABLE3_N30_DIGEST
