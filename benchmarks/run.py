@@ -80,6 +80,9 @@ def main() -> None:
     section("prefetch", "Async prefetch (lazy vs plan-time pod loads)",
             tables.table_prefetch, tasks_per_session=conc_tasks,
             parallel=par)
+    section("admission", "Cross-session admission (TinyLFU vs install-all)",
+            tables.table_admission, tasks_per_session=conc_tasks,
+            parallel=par)
     section("belady", "Beyond-paper: Belady oracle bound",
             tables.belady_bound, n=n23)
 
@@ -105,10 +108,18 @@ def main() -> None:
         conc = [r.split(",") for r in conc_rows if r.startswith("concurrency")]
         conc_max = max(conc, key=lambda c: int(c[1])) if conc else None
         pf_rows = [r.split(",") for r in by_id.get("prefetch", [])
-                   if r.startswith("prefetch,") and r.split(",")[2] == "prefetch"]
-        pf_max = max(pf_rows, key=lambda c: int(c[1])) if pf_rows else None
+                   if r.startswith("prefetch,") and r.split(",")[3] == "prefetch"]
+        # the <=2:1 grid rows (8 pods) vs the 4:1 saturation row (4 pods)
+        pf_grid = [c for c in pf_rows if int(c[2]) == 8]
+        pf_max = max(pf_grid, key=lambda c: int(c[1])) if pf_grid else None
+        pf_sat = next((c for c in pf_rows
+                       if int(c[1]) == 16 and int(c[2]) == 4), None)
+        adm_rows = [r.split(",") for r in by_id.get("admission", [])
+                    if r.startswith("admission,")]
+        adm_cell = {c[4]: c for c in adm_rows
+                    if c[1] == "working-low" and c[2] == "16"}
         record = {
-            "schema": "bench_dcache/v1",
+            "schema": "bench_dcache/v2",
             "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "platform": {"python": platform.python_version(),
                          "machine": platform.machine()},
@@ -132,17 +143,44 @@ def main() -> None:
                 "concurrency_local_hit_pct": (float(conc_max[13])
                                               if conc_max else None),
                 "prefetch_max_sessions": (int(pf_max[1]) if pf_max else None),
-                "prefetch_p95_latency_s": (float(pf_max[4])
+                "prefetch_p95_latency_s": (float(pf_max[5])
                                            if pf_max else None),
-                "prefetch_p95_speedup": (float(pf_max[13])
+                "prefetch_p95_speedup": (float(pf_max[15])
                                          if pf_max else None),
-                "prefetch_overlap_s": (float(pf_max[11]) if pf_max else None),
+                "prefetch_overlap_s": (float(pf_max[13]) if pf_max else None),
+                # 4:1 saturation cell (16 sessions / 4 pods): the
+                # queueing-aware budget must keep this >= 1.0
+                "prefetch_p95_speedup_4to1": (float(pf_sat[15])
+                                              if pf_sat else None),
+                # admission headline (working-set low reuse, 16 sessions /
+                # 4 pods): baseline vs TinyLFU local-hit % and p95
+                "admission_base_local_hit_pct": _adm(adm_cell, "none", 6),
+                "admission_tinylfu_local_hit_pct": _adm(adm_cell, "tinylfu",
+                                                        6),
+                "admission_base_p95_s": _adm(adm_cell, "none", 8),
+                "admission_tinylfu_p95_s": _adm(adm_cell, "tinylfu", 8),
+                "admission_bypassed": _adm(adm_cell, "tinylfu", 11,
+                                           cast=int),
+                "admission_llm_agreement_pct": _adm(adm_cell, "llm-tinylfu",
+                                                    13),
             },
         }
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)
             f.write("\n")
         print(f"# wrote {args.json}")
+
+
+def _adm(cell_by_admission, admission, idx, cast=float):
+    """Pull one field from the admission headline cell's row for the given
+    admission mode (None when the row is missing)."""
+    row = cell_by_admission.get(admission)
+    if row is None:
+        return None
+    try:
+        return cast(row[idx])
+    except (ValueError, IndexError):
+        return None
 
 
 def _mean_sim_time(t1_rows) -> float:

@@ -168,7 +168,9 @@ def table_concurrency(tasks_per_session: int = 25,
 
 def table_prefetch(tasks_per_session: int = 25,
                    sessions: Sequence[int] = (1, 4, 8, 16),
-                   n_pods: int = 8, parallel: bool = False) -> List[str]:
+                   n_pods: int = 8,
+                   saturated: Sequence[Sequence[int]] = ((16, 4),),
+                   parallel: bool = False) -> List[str]:
     """Beyond-paper: lazy vs async-prefetch data plane on the event-granular
     engine. ``prefetch`` issues a session's planned ``load_db`` keys the
     moment its ReadPlan lands, overlapping DB service with the planning LLM
@@ -176,40 +178,111 @@ def table_prefetch(tasks_per_session: int = 25,
     same answers — only time moves. ``p95_speedup`` is lazy/prefetch p95
     task latency; ``overlap_s`` is DB service hidden behind LLM work.
 
-    Default is 8 pods (sessions:pods <= 2:1, the paper's many-endpoint
-    regime): there prefetch strictly reduces p50 AND p95 at every N. Past
-    ~4:1 oversubscription pods saturate and no issue-order policy can win
-    the tail — admission control (see the engine's prefetcher) then degrades
-    prefetch to lazy loading rather than fattening p95."""
-    rows = ["table,n_sessions,mode,p50_s,p95_s,mean_s,stall_total_s,"
-            "stalled_loads,pf_issued,pf_hits,pf_wait_s,overlap_s,"
+    The default grid is 8 pods (sessions:pods <= 2:1, the paper's
+    many-endpoint regime) plus the ``saturated`` ratio cells (16
+    sessions / 4 pods = 4:1). The queueing-aware budget — consume-horizon
+    + per-pod depth guard over observed service times — keeps p95 strictly
+    reduced at <= 2:1 AND no worse than lazy at 4:1, where the old
+    planning-latency budget shut prefetch off entirely. ``pf_skipped``
+    counts planned loads the budget left lazy."""
+    rows = ["table,n_sessions,n_pods,mode,p50_s,p95_s,mean_s,stall_total_s,"
+            "stalled_loads,pf_issued,pf_skipped,pf_hits,pf_wait_s,overlap_s,"
             "joined_loads,p95_speedup"]
-    cells = [lambda ns=ns, pf=pf: run_episode(ns, tasks_per_session,
-                                              n_pods=n_pods, seed=0,
-                                              prefetch=pf)
-             for ns in sessions for pf in (False, True)]
+    configs = [(ns, n_pods) for ns in sessions] + [tuple(c) for c in saturated]
+    cells = [lambda ns=ns, npod=npod, pf=pf: run_episode(
+                 ns, tasks_per_session, n_pods=npod, seed=0, prefetch=pf)
+             for ns, npod in configs for pf in (False, True)]
     results = _run_cells(cells, parallel)
-    for i, ns in enumerate(sessions):
+    for i, (ns, npod) in enumerate(configs):
         lazy, pf = results[2 * i].metrics, results[2 * i + 1].metrics
         for mode, m, sp in (("lazy", lazy, ""),
                             ("prefetch", pf,
                              f"{lazy.p95_task_latency_s / pf.p95_task_latency_s:.3f}")):
             rows.append(
-                f"prefetch,{ns},{mode},{m.p50_task_latency_s:.3f},"
+                f"prefetch,{ns},{npod},{mode},{m.p50_task_latency_s:.3f},"
                 f"{m.p95_task_latency_s:.3f},{m.mean_task_latency_s:.3f},"
                 f"{m.total_stall_s:.3f},{m.stalled_loads},"
-                f"{m.prefetch_issued},{m.prefetch_hits},"
-                f"{m.prefetch_wait_s:.3f},{m.overlap_credit_s:.3f},"
-                f"{m.joined_loads},{sp}")
+                f"{m.prefetch_issued},{m.prefetch_skipped},"
+                f"{m.prefetch_hits},{m.prefetch_wait_s:.3f},"
+                f"{m.overlap_credit_s:.3f},{m.joined_loads},{sp}")
+    return rows
+
+
+def table_admission(tasks_per_session: int = 25,
+                    parallel: bool = False) -> List[str]:
+    """Beyond-paper: cross-session cache admission on the shared pod cache.
+
+    Every cell pairs the PR-2 baseline (``admission=None``: install every
+    load) against TinyLFU admission (shared count-min frequency sketch,
+    aged on sim time; rejected keys bypass without evicting residents) on
+    the same seeds — answers are identical, only cache state and time move.
+    The scenario column sweeps qualitatively different key-popularity
+    regimes (see ``WorkloadSampler``), and the scale rows push the
+    contention to 32 and 64 sessions. The headline row (working-set low
+    reuse, 16 sessions / 4 pods) additionally runs the GPT-driven admission
+    path (``llm-tinylfu``): the policy is described to the LLM in natural
+    language and graded against the programmatic rule (``agreement_pct``).
+
+    ``hit_delta_pp`` is the local-hit percentage-point gain over the
+    baseline row of the same cell; ``p95_speedup`` is baseline p95 over
+    this row's p95 (>1 = admission is faster).
+    """
+    rows = ["table,scenario,n_sessions,n_pods,admission,reuse,local_hit_pct,"
+            "p50_s,p95_s,stall_total_s,admitted,bypassed,bypass_reads,"
+            "agreement_pct,adm_tokens,p95_speedup,hit_delta_pp"]
+    configs = [
+        # (label, engine_kw, n_sessions, n_pods, reuse)
+        ("working-low", {}, 16, 4, 0.3),
+        ("zipf-1.1", {"scenario": "zipf", "scenario_kw": {"zipf_a": 1.1}},
+         16, 4, 0.3),
+        ("zipf-1.5", {"scenario": "zipf", "scenario_kw": {"zipf_a": 1.5}},
+         16, 4, 0.3),
+        ("scan", {"scenario": "scan"}, 16, 4, 0.3),
+        ("hotspot", {"scenario": "hotspot"}, 16, 4, 0.3),
+        ("working-low", {}, 32, 4, 0.3),
+        ("working-low", {}, 64, 8, 0.3),
+    ]
+    grid = [(cfg, adm) for cfg in configs for adm in (None, "tinylfu")]
+    grid.append((configs[0], "llm-tinylfu"))    # GPT-driven headline cell
+    cells = [lambda cfg=cfg, adm=adm: run_episode(
+                 cfg[2], tasks_per_session, n_pods=cfg[3],
+                 reuse_rate=cfg[4], seed=0,
+                 admission=(None if adm is None else "tinylfu"),
+                 admission_impl=("llm" if adm == "llm-tinylfu"
+                                 else "python"),
+                 **cfg[1])
+             for cfg, adm in grid]
+    results = _run_cells(cells, parallel)
+    base_hit: Dict[tuple, float] = {}
+    base_p95: Dict[tuple, float] = {}
+    for ((label, _, ns, npod, reuse), adm), res in zip(grid, results):
+        m = res.metrics
+        key = (label, ns, npod)
+        if adm is None:
+            base_hit[key] = m.local_hit_rate
+            base_p95[key] = m.p95_task_latency_s
+            sp = delta = ""
+        else:
+            sp = f"{base_p95[key] / m.p95_task_latency_s:.3f}"
+            delta = f"{100 * (m.local_hit_rate - base_hit[key]):.2f}"
+        rows.append(
+            f"admission,{label},{ns},{npod},{adm or 'none'},{reuse},"
+            f"{100 * m.local_hit_rate:.2f},{m.p50_task_latency_s:.3f},"
+            f"{m.p95_task_latency_s:.3f},{m.total_stall_s:.3f},"
+            f"{m.admitted},{m.bypassed},{m.bypass_reads},"
+            f"{100 * m.admission_agreement:.2f},{m.admission_tokens},"
+            f"{sp},{delta}")
     return rows
 
 
 def belady_bound(n: int = 200, parallel: bool = False) -> List[str]:
     """Beyond-paper: Belady/MIN oracle as the eviction upper bound.
 
-    The oracle's future-request list is refreshed before each task with the
-    exact upcoming key sequence (possible offline; a real system would
-    approximate it with a predictor)."""
+    The oracle is given the full upcoming key sequence once (indexed into
+    per-key position lists by the policy) and its ``cursor`` advances as
+    tasks consume requests — O(1) per task instead of re-slicing the
+    remaining stream (identical victims: next-use comparisons shift by a
+    constant)."""
     from repro.agent.geollm.evaluator import evaluate
 
     rows = ["table,policy,avg_time_s,cache_hit_pct"]
@@ -219,10 +292,12 @@ def belady_bound(n: int = 200, parallel: bool = False) -> List[str]:
                            read_impl="python", update_impl="python")
         tasks = _tasks(n, 0.8)
         future = [k for t in tasks for k in t.required_keys]
+        if pol == "belady":
+            rt.runner.controller.policy.future = future
         traces, consumed = [], 0
         for t in tasks:
             if pol == "belady":
-                rt.runner.controller.policy.future = future[consumed:]
+                rt.runner.controller.policy.cursor = consumed
             consumed += len(t.required_keys)
             traces.append(rt.runner.run_task(t))
         r = evaluate(tasks, traces, rt.cache.stats)

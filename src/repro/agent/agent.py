@@ -56,6 +56,9 @@ class TaskTrace:
     bad_calls: int
     cache_miss_replans: int
     answers: Dict[int, Any]       # step index -> produced answer
+    # loads this task streamed through the cache uninstalled (admission
+    # bypass); always 0 without an admission policy
+    cache_bypasses: int = 0
 
 
 class AgentRunner:
@@ -239,6 +242,8 @@ class AgentRunner:
             if isinstance(upd, dict) and upd.get("prompt_tokens"):
                 trace.tokens += (upd["prompt_tokens"]
                                  + upd["completion_tokens"])
+            if isinstance(upd, dict):
+                trace.cache_bypasses = upd.get("bypassed", 0)
 
         # final answer round
         trace.tokens += self._llm_round(FINAL_PROMPT_TOKENS,

@@ -76,6 +76,8 @@ class SimLLM:
             return self._read_decision(prompt)
         if "return the NEW cache state" in prompt:
             return self._update_decision(prompt)
+        if "ADMIT the candidate" in prompt:
+            return self._admission_decision(prompt)
         # planning / answer prompts: canned completion (token accounting is
         # handled by the agent's latency model)
         return ("Thought: I will decompose the task and call the tools in "
@@ -123,6 +125,35 @@ class SimLLM:
             keys = self._perturb(cache, loads, cap)
         return ("Thought: applying the update policy as described.\n"
                 f"Answer: {json.dumps(keys)}")
+
+    # -- cache ADMISSION -----------------------------------------------------
+    def _admission_decision(self, prompt: str) -> str:
+        """Admission decided by *reading the policy text* (like eviction):
+        the frequency estimates are in the prompt, the rule is in the
+        policy description, and the calibrated error rate applies."""
+        # the live lines are the LAST matches (few-shot examples above them
+        # also contain Candidate/victim frequency lines)
+        kf = int(re.findall(r"Candidate key: \S+ \(estimated frequency: "
+                            r"(\d+)\)", prompt)[-1])
+        vf = int(re.findall(r"Eviction victim if admitted: \S+ \(estimated "
+                            r"frequency: (\d+)\)", prompt)[-1])
+        # the live policy line precedes the few-shot examples (which mention
+        # other policies): take the FIRST match
+        policy = re.search(r"Admission policy: (.*)", prompt).group(1).lower()
+        if "strictly higher" in policy:
+            admit = kf > vf
+        elif "at least twice" in policy:
+            admit = kf >= 2
+        elif "always-admit" in policy or "never bypass" in policy:
+            admit = True
+        else:
+            admit = kf > vf
+        if self.rng.random() < self.profile.cache_eps:
+            admit = not admit
+        decision = "admit" if admit else "bypass"
+        return ("Thought: weighing the candidate's frequency against the "
+                "victim's under the stated policy.\n"
+                f'Answer: {json.dumps({"decision": decision})}')
 
     def _victim(self, state: Dict[str, dict], policy_text: str,
                 protected=()) -> str:

@@ -38,6 +38,19 @@ contend on the *shared* localized cache. This module models that regime:
   prefetch-issued load never counts as a stall — stalls are exclusively
   time spent queued behind *demand* loads.
 
+* **cross-session admission** (``admission="tinylfu"`` etc.): one
+  :class:`~repro.core.admission.FrequencySketch` + admission policy shared
+  by every pod and session gates installs — a full pod only evicts for a
+  candidate the policy admits; rejected keys **bypass** (the value streams
+  to the session, residents stay). ``admission_impl="llm"`` routes each
+  decision through the GPT-driven prompt path
+  (:class:`~repro.core.admission.LLMAdmission`), mirroring the paper's
+  prompted eviction. Default (``None``) reproduces the install-everything
+  engine bit-identically;
+* **workload scenarios** (``scenario=``): beyond the paper's working-set
+  sampler, zipfian skew, sequential scan, and shifting-hotspot phases
+  (see :class:`~repro.agent.geollm.workload.WorkloadSampler`).
+
 Single-session behavior: ``n_sessions=1`` (lazy) reproduces the same
 answer/token/time traces as the plain :class:`repro.agent.runtime.Runtime`
 path (contention can never fire with one session); with prefetch enabled
@@ -69,6 +82,7 @@ from repro.agent.geollm.evaluator import Report, evaluate
 from repro.agent.geollm.geotools import make_geo_tools
 from repro.agent.geollm.simclock import EventQueue, LatencyModel, SimClock
 from repro.agent.geollm.workload import Task, WorkloadSampler, compute_gold
+from repro.core.admission import FrequencySketch, make_admission
 from repro.core.controller import ReadPlan
 from repro.core.distributed_cache import InFlightLoad, PodLocalCacheRouter
 from repro.core.tools import ToolRegistry, ToolSpec
@@ -93,6 +107,7 @@ class PodLoadStats:
     stall_s: float = 0.0           # total demand-queueing wait charged
     busy_until: float = 0.0        # end of the pod's current busy window
     overlap_credit_s: float = 0.0  # prefetch service hidden behind LLM work
+    service_ewma_s: float = 0.0    # observed per-load service time (EWMA)
 
 
 class PodContention:
@@ -116,6 +131,12 @@ class PodContention:
             p: PodLoadStats() for p in pod_ids}
         self.arrival_log: List[float] = []
 
+    @staticmethod
+    def _observe(st: PodLoadStats, service_s: float) -> None:
+        # observed-service EWMA feeding the prefetcher's queueing model
+        st.service_ewma_s = (service_s if st.service_ewma_s == 0.0
+                             else 0.8 * st.service_ewma_s + 0.2 * service_s)
+
     def acquire(self, pod: str, now: float, service_s: float) -> float:
         """Serve one demand load; returns the total dwell (stall + service)
         to charge to the calling session's clock."""
@@ -126,6 +147,7 @@ class PodContention:
         st.busy_until = start + service_s
         st.loads += 1
         st.demand_loads += 1
+        self._observe(st, service_s)
         if stall > 0:
             st.stalled_loads += 1
             st.stall_s += stall
@@ -142,7 +164,25 @@ class PodContention:
         st.busy_until = start + service_s
         st.loads += 1
         st.prefetch_loads += 1
+        self._observe(st, service_s)
         return start, st.busy_until
+
+    # -- queueing signals (the prefetcher's budget inputs) -------------------
+    def backlog_s(self, pod: str, now: float) -> float:
+        """Seconds of already-queued service ahead of a load arriving now."""
+        return max(0.0, self.pods[pod].busy_until - now)
+
+    def expected_service_s(self, pod: str, default: float) -> float:
+        """Observed per-load service time on ``pod`` (EWMA), or ``default``
+        before any load has been observed."""
+        ewma = self.pods[pod].service_ewma_s
+        return ewma if ewma > 0.0 else default
+
+    def queue_depth(self, pod: str, now: float, default_service: float) -> float:
+        """Backlog expressed in *loads*: backlog seconds over the observed
+        service time (reporting/diagnostics; the budget uses seconds)."""
+        svc = self.expected_service_s(pod, default_service)
+        return self.backlog_s(pod, now) / svc if svc > 0 else 0.0
 
     def join_stall(self, pod: str, wait_s: float) -> None:
         """A session queued behind another session's *demand* load of the
@@ -247,9 +287,14 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
        frame into the pod cache (first fill wins — later sessions hit it).
 
     Accounting invariant (locked in by tests):
-    ``routed == local_hits + remote_loads + joined_in_flight`` where
-    ``routed`` counts logical accesses; physical DB loads are
+    ``routed == local_hits + remote_loads + joined_in_flight +
+    bypass_reads`` where ``routed`` counts logical accesses
+    (``bypass_reads`` — consumes served straight from a
+    completed-but-bypassed prefetch — is zero without admission);
+    physical DB loads are
     ``remote_loads + prefetch_issued == contention.total_loads``.
+    Every logical access also touches the shared frequency sketch
+    (``router.note_access``), which is the admission policy's evidence.
     """
     stats = session.stats
 
@@ -269,12 +314,14 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
         value = router.pods[pod].get(key)    # raises KeyError on miss
         router.stats.routed += 1
         router.stats.local_hits += 1
+        router.note_access(key, clock.now())
         clock.advance(clock.latency.cache_read(value.size_mb))
         return value
 
     def load_db(key: str):
         pod = router.owner(key)
         now = clock.now()
+        router.note_access(key, now)
         rec = router.in_flight.get(key)
         if rec is not None:                       # 1. join an in-flight load
             session.prefetched.pop(key, None)
@@ -302,6 +349,16 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
             _credit_once(own, now)
             clock.advance(clock.latency.cache_read(value.size_mb))
             return value
+        if own is not None and own.bypassed:
+            # 2b. own prefetch completed but admission rejected the install:
+            # bypass-on-miss — the frame streams through to the session
+            # (same read cost as a local consume), residents untouched
+            router.stats.routed += 1
+            router.stats.bypass_reads += 1
+            stats.prefetch_hits += 1
+            _credit_once(own, now)
+            clock.advance(clock.latency.cache_read(own.value.size_mb))
+            return own.value
         # 3. demand load (also covers an erroneous load_db decision for an
         # already-cached key, and a prefetched frame evicted before use —
         # both pay the full DB dwell, like the original engine)
@@ -350,6 +407,7 @@ class SessionStats:
     prefetch_issued: int = 0
     prefetch_hits: int = 0
     prefetch_wait_s: float = 0.0
+    prefetch_skipped: int = 0      # planned loads left lazy by the budget
 
 
 @dataclasses.dataclass
@@ -398,6 +456,15 @@ class EpisodeMetrics:
     prefetch_wait_s: float = 0.0
     overlap_credit_s: float = 0.0
     joined_loads: int = 0
+    prefetch_skipped: int = 0
+    # admission accounting (all zero / 1.0 when admission is off).
+    # admission_tokens is the GPT-driven path's decision cost — charged as
+    # tokens only, off the critical path like the paper's prompted update
+    admitted: int = 0
+    bypassed: int = 0
+    bypass_reads: int = 0
+    admission_agreement: float = 1.0
+    admission_tokens: int = 0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -437,7 +504,11 @@ class ConcurrentEpisodeEngine:
                  prompting: str = "cot", few_shot: bool = True,
                  policy: str = "lru", llm_decisions: bool = True,
                  latency: Optional[LatencyModel] = None, seed: int = 0,
-                 prefetch: bool = False):
+                 prefetch: bool = False, admission: Optional[str] = None,
+                 admission_impl: str = "python",
+                 scenario: str = "working",
+                 scenario_kw: Optional[Dict] = None,
+                 sketch_kw: Optional[Dict] = None):
         assert n_sessions >= 1 and n_pods >= 1
         self.n_sessions = n_sessions
         self.n_pods = n_pods
@@ -448,6 +519,23 @@ class ConcurrentEpisodeEngine:
         self.seed = seed
         self.capacity_per_pod = capacity_per_pod
         self.prefetch = prefetch
+        self.scenario = scenario
+        self.scenario_kw = dict(scenario_kw or {})
+
+        # cross-session admission: ONE policy + ONE frequency sketch shared
+        # by every pod and session (key popularity is global). The sketch
+        # ages on simulated time — touches carry the session clocks, which
+        # only execute at the global-minimum event time. ``admission=None``
+        # (the default) reproduces the install-everything engine exactly.
+        self.sketch = None
+        adm = None
+        if admission is not None:
+            self.sketch = FrequencySketch(**(sketch_kw or {}))
+            adm_llm = (SimLLM(self.profile, seed=seed + 104729)
+                       if admission_impl == "llm" else None)
+            adm = make_admission(admission, impl=admission_impl, llm=adm_llm,
+                                 few_shot=few_shot)
+        self.admission_policy = adm
 
         # shared infrastructure: datastore + pod-sharded cache. Pod caches
         # use tick-order recency (no global wall clock exists across
@@ -456,7 +544,8 @@ class ConcurrentEpisodeEngine:
         self.pod_ids = [f"pod{i}" for i in range(n_pods)]
         self.router = PodLocalCacheRouter(self.pod_ids,
                                           capacity_per_pod=capacity_per_pod,
-                                          policy_name=policy)
+                                          policy_name=policy,
+                                          admission=adm, sketch=self.sketch)
         self.contention = PodContention(self.pod_ids)
 
     # -- session assembly ---------------------------------------------------
@@ -469,7 +558,9 @@ class ConcurrentEpisodeEngine:
         controller = SharedCacheController(
             self.router, rng=llm.rng,
             decision_eps=self.profile.cache_eps if self.llm_decisions else 0.0)
-        tasks = WorkloadSampler(reuse_rate, seed=sseed).sample(n_tasks)
+        tasks = WorkloadSampler(reuse_rate, seed=sseed,
+                                scenario=self.scenario,
+                                **self.scenario_kw).sample(n_tasks)
         compute_gold(tasks, self.store)
         session = Session(sid=sid, clock=clock, llm=llm, runner=None,
                           tasks=tasks, stats=stats)
@@ -485,6 +576,16 @@ class ConcurrentEpisodeEngine:
         return session
 
     # -- async prefetch -----------------------------------------------------
+    # modeled size of an average yearly frame (12-18k rows x 5200 B); only
+    # used for the per-key consume-gap floor in the prefetch budget
+    _MEAN_FRAME_MB = 78.0
+    # a pod with this much queued work (in loads: backlog seconds over the
+    # observed service EWMA) stops accepting prefetches — parking more
+    # early loads there only displaces other sessions' demand traffic
+    # (measured: the depth guard is what keeps the p95 win at 4:1
+    # saturation, where per-load hideability alone turns it into a loss)
+    _PREFETCH_DEPTH_MAX = 1.0
+
     def _make_prefetcher(self, session: Session,
                          events: EventQueue) -> Callable[[Task, ReadPlan],
                                                          None]:
@@ -492,20 +593,33 @@ class ConcurrentEpisodeEngine:
         loads the instant the ReadPlan lands, so DB service overlaps the
         planning LLM round that follows.
 
-        Admission control: a key is only prefetched while its owning pod's
-        backlog still fits inside the *overlap budget* — the latency of the
-        planning round the load can hide behind. Past that point an early
-        issue cannot complete before consume time anyway; it would only
-        occupy pod bandwidth ahead of other sessions' demand loads and fatten
-        the tail (measured: unbounded prefetch at 16 sessions/4 pods turns
-        the p95 win into a loss). Saturated pods therefore degrade
-        gracefully to lazy demand loading."""
+        Queueing-aware budget, two tests per key (both from per-pod queue
+        depth + observed service times):
+
+        1. **consume-horizon**: the owning pod must be able to *start
+           serving the load before the session's predicted consume time*.
+           The horizon walks the required keys in acquisition order,
+           accumulating (a) the planning round ahead, (b) a pod-local read
+           per already-cached key, (c) the completion times of the keys
+           this very walk prefetched (a later key cannot be consumed
+           before an earlier one lands), and (d) the pod's observed
+           service EWMA for keys left lazy;
+        2. **depth guard**: the pod's queue depth (backlog seconds over
+           its service EWMA) must be below ``_PREFETCH_DEPTH_MAX`` —
+           at saturation individually-hideable prefetches still displace
+           other sessions' demand loads and fatten the tail.
+
+        Failing either leaves the key lazy, so saturated pods degrade
+        gracefully to demand loading. The PR-2 planning-latency budget
+        shut prefetch off entirely past ~4:1 sessions-to-pods; this budget
+        keeps the p95 win there (measured in ``table_prefetch``'s
+        16-sessions/4-pods rows — see benchmarks/README.md)."""
         router, store, contention = self.router, self.store, self.contention
         prof = self.profile
         plan_tok = (PLAN_PROMPT_TOKENS_FS if prof.few_shot
                     else PLAN_PROMPT_TOKENS)[prof.prompting]
 
-        def _overlap_budget(task: Task) -> float:
+        def _plan_latency(task: Task) -> float:
             lat = session.clock.latency
             if prof.prompting == "cot":   # the full planning round is ahead
                 return lat.llm_round(
@@ -517,17 +631,33 @@ class ConcurrentEpisodeEngine:
 
         def prefetch(task: Task, plan: ReadPlan) -> None:
             now = session.clock.now()
-            budget = _overlap_budget(task)
-            for k in plan.load_keys():
+            lat = session.clock.latency
+            # predicted seconds until the session consumes the NEXT key,
+            # starting with the planning round it is about to pay
+            eta = _plan_latency(task)
+            consume_gap = lat.cache_read(self._MEAN_FRAME_MB)
+            for k in task.required_keys:
+                if plan.choices.get(k) != "load_db":
+                    eta += consume_gap        # pod-local read of a hit
+                    continue
                 pod = router.owner(k)
                 if k in router.in_flight or k in router.pods[pod]:
-                    continue      # already loading / already cached
-                backlog = contention.pods[pod].busy_until - now
-                if backlog > budget:
-                    continue      # saturated pod: fall back to lazy demand
+                    eta += consume_gap        # join / hit at consume time
+                    continue
                 frame = store.peek(k)
+                service = lat.db_load(frame.size_mb)
+                if (contention.backlog_s(pod, now) > eta
+                        or contention.queue_depth(pod, now, service)
+                        >= self._PREFETCH_DEPTH_MAX):
+                    # leave the key lazy when the pod either cannot START
+                    # serving it before its predicted consume point, or is
+                    # already queueing deeper than the depth guard allows —
+                    # the demand load will queue later at its natural FCFS
+                    # position instead of ahead of other sessions' traffic
+                    session.stats.prefetch_skipped += 1
+                    eta += contention.expected_service_s(pod, service)
+                    continue
                 store.loads += 1
-                service = session.clock.latency.db_load(frame.size_mb)
                 _, completes = contention.begin(pod, now, service)
                 rec = router.start_load(k, frame, frame.size_bytes,
                                         issued_at=now, completes_at=completes,
@@ -535,6 +665,8 @@ class ConcurrentEpisodeEngine:
                 session.prefetched[k] = rec
                 session.stats.prefetch_issued += 1
                 events.push(completes, PRI_FINISH, payload=("finish", k))
+                # a later key cannot be consumed before this one lands
+                eta = max(eta, completes - now) + consume_gap
 
         return prefetch
 
@@ -609,6 +741,15 @@ class ConcurrentEpisodeEngine:
             prefetch_wait_s=sum(s.stats.prefetch_wait_s for s in sessions),
             overlap_credit_s=self.contention.overlap_credit_s,
             joined_loads=rstats.joined_in_flight,
+            prefetch_skipped=sum(s.stats.prefetch_skipped for s in sessions),
+            admitted=rstats.admitted,
+            bypassed=rstats.bypassed,
+            bypass_reads=rstats.bypass_reads,
+            admission_agreement=getattr(self.admission_policy, "agreement",
+                                        1.0),
+            admission_tokens=(
+                getattr(self.admission_policy, "prompt_tokens", 0)
+                + getattr(self.admission_policy, "completion_tokens", 0)),
         )
 
 

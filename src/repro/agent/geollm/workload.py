@@ -10,6 +10,7 @@ benchmark; 0.0-0.8 for the Table II ablation), and a 500-query mini set.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import random
 from typing import Any, Dict, List, Optional
 
@@ -122,15 +123,64 @@ STEP_KINDS = ("detect", "lcc", "vqa", "plot", "count", "timeseries")
 
 
 class WorkloadSampler:
-    """Samples tasks whose keys repeat with probability ``reuse_rate``."""
+    """Samples tasks under one of several key-popularity *scenarios*.
 
-    def __init__(self, reuse_rate: float = 0.8, seed: int = 0):
+    The default ``"working"`` scenario is the paper's: keys repeat out of a
+    sliding working set with probability ``reuse_rate`` (its RNG draw
+    sequence is untouched by the scenario machinery — Table I-III digests
+    depend on it). The additional scenarios stress the shared cache in
+    qualitatively different ways (the admission benchmark sweeps them):
+
+    * ``"zipf"`` — stationary skew: keys drawn from a Zipf(``zipf_a``)
+      distribution over a seed-shuffled key order. High skew rewards
+      keeping the few hot keys resident; the long tail is one-shot
+      traffic that churns an admission-less cache.
+    * ``"scan"`` — sequential sweep through the whole key space (the
+      classic cache-adversarial pattern): every access is a compulsory
+      miss, so *nothing* deserves admission once the cache warms.
+    * ``"hotspot"`` — shifting phases: for ``phase_len`` key draws a hot
+      set of ``hot_k`` keys serves ``hot_p`` of the traffic, then the hot
+      set resamples. Tests how quickly admission+aging track drift.
+    """
+
+    def __init__(self, reuse_rate: float = 0.8, seed: int = 0,
+                 scenario: str = "working", zipf_a: float = 1.2,
+                 hot_k: int = 4, hot_p: float = 0.9, phase_len: int = 60):
         self.reuse_rate = reuse_rate
         self.rng = random.Random(seed)
         self.keys = all_keys()
         self.working: List[str] = []
+        self.scenario = scenario
+        if scenario == "zipf":
+            # seed-shuffled rank order (drawn from a separate RNG so the
+            # "working" draw stream stays byte-identical to pre-scenario
+            # code); cumulative weights for rng.choices' internal bisect
+            order = list(self.keys)
+            random.Random(seed ^ 0x5EED).shuffle(order)
+            self._zipf_keys = order
+            w = [1.0 / (r + 1) ** zipf_a for r in range(len(order))]
+            self._zipf_cum = list(itertools.accumulate(w))
+        self._scan_pos = 0
+        self.hot_k, self.hot_p, self.phase_len = hot_k, hot_p, phase_len
+        self._hot: List[str] = []
+        self._draws = 0
 
     def _sample_key(self) -> str:
+        if self.scenario == "zipf":
+            return self.rng.choices(self._zipf_keys,
+                                    cum_weights=self._zipf_cum)[0]
+        if self.scenario == "scan":
+            key = self.keys[self._scan_pos % len(self.keys)]
+            self._scan_pos += 1
+            return key
+        if self.scenario == "hotspot":
+            if self._draws % self.phase_len == 0:
+                self._hot = self.rng.sample(self.keys, self.hot_k)
+            self._draws += 1
+            if self.rng.random() < self.hot_p:
+                return self.rng.choice(self._hot)
+            return self.rng.choice(self.keys)
+        # "working" (default; draw sequence is digest-locked)
         if self.working and self.rng.random() < self.reuse_rate:
             return self.rng.choice(self.working)
         key = self.rng.choice(self.keys)

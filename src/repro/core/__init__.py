@@ -1,10 +1,21 @@
 """LLM-dCache core: the paper's contribution.
 
 Cache mechanism (``cache``), eviction policies with natural-language
-descriptions (``policies``), cache ops as callable tools (``tools``),
+descriptions (``policies``), cross-session admission with a shared
+frequency sketch (``admission``), cache ops as callable tools (``tools``),
 programmatic vs GPT-driven controllers (``controller``), prompt templates
 (``prompts``), and multi-pod localized caching (``distributed_cache``).
 """
+from repro.core.admission import (  # noqa: F401
+    ADMISSIONS,
+    AdmissionPolicy,
+    AdmitAll,
+    Doorkeeper,
+    FrequencySketch,
+    LLMAdmission,
+    TinyLFU,
+    make_admission,
+)
 from repro.core.cache import CacheEntry, CacheStats, DataCache  # noqa: F401
 from repro.core.controller import (  # noqa: F401
     LLMController,

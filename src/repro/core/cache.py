@@ -34,6 +34,11 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     puts: int = 0
+    # admission accounting (zero unless an AdmissionPolicy is wired in the
+    # controller): full-cache decisions to install vs bypass. A bypassed
+    # load streams to the caller without evicting any resident.
+    admitted: int = 0
+    bypassed: int = 0
     # GPT-hit accounting (paper Table III): decisions where the LLM correctly
     # used the cache when it should have (and main memory when it should have)
     llm_correct_decisions: int = 0

@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from repro.core.admission import AdmissionPolicy, FrequencySketch
 from repro.core.cache import DataCache
 from repro.core.policies import Policy
 from repro.core.prompts import (
@@ -20,6 +21,48 @@ from repro.core.prompts import (
     read_decision_prompt,
     update_decision_prompt,
 )
+
+
+def _admission_tokens(admission, since=(0, 0)):
+    """Prompt/completion tokens an LLM-driven admission policy has consumed
+    beyond ``since`` (zeros for programmatic policies — they have no token
+    counters). Lets the controllers fold GPT-admission cost into the same
+    update-round accounting the runner already charges (off the critical
+    path, like the paper's prompted update)."""
+    pt = getattr(admission, "prompt_tokens", 0) - since[0]
+    ct = getattr(admission, "completion_tokens", 0) - since[1]
+    return pt, ct
+
+
+def admit_loads(cache: DataCache, policy: Policy,
+                admission: Optional[AdmissionPolicy],
+                sketch: Optional[FrequencySketch],
+                loads: Sequence[str]) -> List[str]:
+    """Admission pre-filter for the LLM update path: drop this round's
+    loads that must *bypass* (no eviction; the caller already holds the
+    loaded value) before the update prompt is built, counting them in
+    ``cache.stats.bypassed``. Victims are estimated against the pre-round
+    cache snapshot — the same snapshot the LLM sees in its prompt. With no
+    admission policy this reduces to the pre-admission new-loads filter,
+    so default behavior is bit-identical to pre-admission code."""
+    if admission is None:
+        return [k for k in loads if k not in cache]
+    kept: List[str] = []
+    stats = cache.stats
+    occupancy = len(cache)
+    for k in loads:
+        if k in cache or k in kept:
+            continue
+        if occupancy + len(kept) >= cache.capacity:
+            victim = policy.victim(cache.entries())
+            if not admission.admit(k, victim, sketch, cache.entries()):
+                stats.bypassed += 1
+                continue
+            # admitted/bypassed count only consulted (full-cache)
+            # decisions, matching ProgrammaticController and the router
+            stats.admitted += 1
+        kept.append(k)
+    return kept
 
 
 @dataclasses.dataclass
@@ -43,31 +86,56 @@ class ReadPlan:
 
 
 class ProgrammaticController:
-    """Direct Python implementation (Table III row 1 / 'upper bound')."""
+    """Direct Python implementation (Table III row 1 / 'upper bound').
+
+    ``admission``/``sketch`` (both optional) add the cross-session admission
+    gate: a full cache consults the policy before evicting for a new load;
+    rejected keys bypass (no eviction, the value streams to the caller).
+    Defaults keep the pre-admission behavior bit-identical.
+    """
 
     kind = "python"
 
-    def __init__(self, cache: DataCache, policy: Policy):
+    def __init__(self, cache: DataCache, policy: Policy,
+                 admission: Optional[AdmissionPolicy] = None,
+                 sketch: Optional[FrequencySketch] = None):
         self.cache = cache
         self.policy = policy
+        self.admission = admission
+        self.sketch = sketch
 
     # -- read ---------------------------------------------------------------
     def plan_reads(self, query: str, required_keys: Sequence[str],
                    few_shot: bool = False) -> ReadPlan:
+        if self.sketch is not None:
+            for k in required_keys:      # every planned access is evidence
+                self.sketch.touch(k)
         return ReadPlan({k: ("read_cache" if k in self.cache else "load_db")
                          for k in required_keys})
 
     # -- update -------------------------------------------------------------
     def update(self, loads: Sequence[str], loader: Callable[[str], Any],
-               size_of: Callable[[Any], int]) -> None:
+               size_of: Callable[[Any], int]) -> Dict[str, int]:
+        bypassed = 0
+        tok0 = _admission_tokens(self.admission)
         for k in loads:
             if k in self.cache:
                 continue
             victim = None
             if len(self.cache) >= self.cache.capacity:
                 victim = self.policy.victim(self.cache.entries())
+                if self.admission is not None:
+                    if not self.admission.admit(k, victim, self.sketch,
+                                                self.cache.entries()):
+                        self.cache.stats.bypassed += 1
+                        bypassed += 1
+                        continue
+                    self.cache.stats.admitted += 1
             v = loader(k)
             self.cache.put(k, v, size_of(v), victim=victim)
+        pt, ct = _admission_tokens(self.admission, since=tok0)
+        return {"prompt_tokens": pt, "completion_tokens": ct,
+                "bypassed": bypassed}
 
 
 class LLMController:
@@ -83,20 +151,29 @@ class LLMController:
 
     def __init__(self, cache: DataCache, policy: Policy, llm,
                  read_impl: str = "llm", update_impl: str = "llm",
-                 few_shot: bool = True):
+                 few_shot: bool = True,
+                 admission: Optional[AdmissionPolicy] = None,
+                 sketch: Optional[FrequencySketch] = None):
         self.cache = cache
         self.policy = policy
         self.llm = llm
         self.read_impl = read_impl
         self.update_impl = update_impl
         self.few_shot = few_shot
-        self._fallback = ProgrammaticController(cache, policy)
+        self.admission = admission
+        self.sketch = sketch
+        self._fallback = ProgrammaticController(cache, policy,
+                                                admission=admission,
+                                                sketch=sketch)
 
     # -- read ---------------------------------------------------------------
     def plan_reads(self, query: str, required_keys: Sequence[str],
                    few_shot: Optional[bool] = None) -> ReadPlan:
         if self.read_impl == "python" or not required_keys:
             return self._fallback.plan_reads(query, required_keys)
+        if self.sketch is not None:
+            for k in required_keys:      # every planned access is evidence
+                self.sketch.touch(k)
         fs = self.few_shot if few_shot is None else few_shot
         prompt = read_decision_prompt(query, required_keys,
                                       self.cache.contents_json(), fs)
@@ -123,12 +200,17 @@ class LLMController:
     def update(self, loads: Sequence[str], loader: Callable[[str], Any],
                size_of: Callable[[Any], int]) -> Dict[str, int]:
         if self.update_impl == "python":
-            self._fallback.update(loads, loader, size_of)
-            return {"prompt_tokens": 0, "completion_tokens": 0}
-        new_loads = [k for k in loads if k not in self.cache]
+            return self._fallback.update(loads, loader, size_of)
+        before = self.cache.stats.bypassed
+        tok0 = _admission_tokens(self.admission)
+        new_loads = admit_loads(self.cache, self.policy, self.admission,
+                                self.sketch, loads)
+        bypassed = self.cache.stats.bypassed - before
+        adm_pt, adm_ct = _admission_tokens(self.admission, since=tok0)
         if not new_loads:
             # still refresh recency metadata for reused keys
-            return {"prompt_tokens": 0, "completion_tokens": 0}
+            return {"prompt_tokens": adm_pt, "completion_tokens": adm_ct,
+                    "bypassed": bypassed}
         prompt = update_decision_prompt(
             self.policy.describe(), new_loads, self.cache.contents_json(),
             self.cache.capacity, self.few_shot)
@@ -148,8 +230,9 @@ class LLMController:
         if new_state is None:
             new_state = expected  # unparseable -> programmatic fallback
         self.cache.apply_state(new_state, loader, size_of)
-        return {"prompt_tokens": len(prompt) // 4,
-                "completion_tokens": len(completion) // 4}
+        return {"prompt_tokens": len(prompt) // 4 + adm_pt,
+                "completion_tokens": len(completion) // 4 + adm_ct,
+                "bypassed": bypassed}
 
     def _expected_state(self, new_loads: Sequence[str]) -> List[str]:
         keys = list(self.cache.keys())
@@ -167,9 +250,11 @@ class LLMController:
 
 def make_controller(cache: DataCache, policy: Policy, *, llm=None,
                     read_impl: str = "python", update_impl: str = "python",
-                    few_shot: bool = True):
+                    few_shot: bool = True, admission=None, sketch=None):
     if read_impl == "python" and update_impl == "python":
-        return ProgrammaticController(cache, policy)
+        return ProgrammaticController(cache, policy, admission=admission,
+                                      sketch=sketch)
     assert llm is not None, "LLM-driven cache ops need an llm backend"
     return LLMController(cache, policy, llm, read_impl=read_impl,
-                         update_impl=update_impl, few_shot=few_shot)
+                         update_impl=update_impl, few_shot=few_shot,
+                         admission=admission, sketch=sketch)

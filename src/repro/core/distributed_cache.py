@@ -22,6 +22,7 @@ import dataclasses
 import hashlib
 from typing import Callable, Dict, List, Optional
 
+from repro.core.admission import AdmissionPolicy, FrequencySketch
 from repro.core.cache import DataCache
 from repro.core.policies import Policy, make_policy
 
@@ -48,6 +49,14 @@ class RoutingStats:
     failovers: int = 0
     joined_in_flight: int = 0
     prefetch_issued: int = 0
+    # admission accounting (all zero when no admission policy is wired):
+    # ``admitted``/``bypassed`` count full-cache admission decisions;
+    # ``bypass_reads`` counts logical accesses served straight from a
+    # completed-but-bypassed load (the invariant gains a fourth bucket:
+    # routed == local_hits + remote_loads + joined_in_flight + bypass_reads)
+    admitted: int = 0
+    bypassed: int = 0
+    bypass_reads: int = 0
 
 
 @dataclasses.dataclass
@@ -64,6 +73,8 @@ class InFlightLoad:
     prefetched: bool = False
     joiners: int = 0
     credited: bool = False    # overlap credited (once per physical load)
+    installed: bool = False   # completion installed it into the pod cache
+    bypassed: bool = False    # completion was rejected by admission
 
 
 class PodLocalCacheRouter:
@@ -71,9 +82,15 @@ class PodLocalCacheRouter:
 
     def __init__(self, pod_ids: List[str], capacity_per_pod: int = 5,
                  policy_name: str = "lru",
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 admission: Optional[AdmissionPolicy] = None,
+                 sketch: Optional[FrequencySketch] = None):
         self._clock = clock
         self._policy_name = policy_name
+        # shared cross-session admission: one policy + one frequency sketch
+        # for ALL pods (popularity is a property of the key, not the pod)
+        self.admission = admission
+        self.sketch = sketch
         self.pods: Dict[str, DataCache] = {
             p: DataCache(capacity_per_pod, clock) for p in pod_ids}
         self.policies: Dict[str, Policy] = {
@@ -106,17 +123,38 @@ class PodLocalCacheRouter:
             raise RuntimeError("no live pods")
         return max(live, key=lambda p: _score(key, p))
 
-    def install(self, pod: str, key: str, value: object, size_bytes: int):
+    def note_access(self, key: str, now: Optional[float] = None) -> None:
+        """Record one logical access in the shared frequency sketch (no-op
+        without a sketch). Callers on a sim clock pass ``now`` so the
+        sketch ages on simulated time."""
+        if self.sketch is not None:
+            self.sketch.touch(key, now)
+
+    def install(self, pod: str, key: str, value: object,
+                size_bytes: int) -> bool:
         """Install a loaded value into ``pod``'s cache, evicting per the
         pod's policy when full (shared by ``fetch`` and the concurrent
-        engine's load path, so eviction semantics cannot diverge)."""
+        engine's load path, so eviction semantics cannot diverge).
+
+        With an admission policy wired, a full cache consults it first:
+        a rejected candidate **bypasses** — nothing is installed, no
+        resident is evicted, and the caller keeps streaming the value to
+        the session. Returns whether ``key`` resides in the pod cache
+        after the call."""
         cache = self.pods[pod]
         if key in cache:
-            return
+            return True
         victim = None
         if len(cache) >= cache.capacity:
             victim = self.policies[pod].victim(cache.entries())
+            if self.admission is not None:
+                if not self.admission.admit(key, victim, self.sketch,
+                                            cache.entries()):
+                    self.stats.bypassed += 1
+                    return False
+                self.stats.admitted += 1
         cache.put(key, value, size_bytes, victim=victim)
+        return True
 
     # -- async completion -----------------------------------------------------
     def start_load(self, key: str, value: object, size_bytes: int, *,
@@ -144,7 +182,9 @@ class PodLocalCacheRouter:
         scheduler when sim time reaches ``completes_at``."""
         rec = self.in_flight.pop(key)
         if self.alive.get(rec.pod, False):
-            self.install(rec.pod, rec.key, rec.value, rec.size_bytes)
+            rec.installed = self.install(rec.pod, rec.key, rec.value,
+                                         rec.size_bytes)
+            rec.bypassed = not rec.installed
         return rec
 
     def fetch(self, key: str, loader: Callable[[str], object],
@@ -153,12 +193,15 @@ class PodLocalCacheRouter:
         pod = self.owner(key)
         cache = self.pods[pod]
         self.stats.routed += 1
+        self.note_access(key, self._clock() if self._clock else None)
         if key in cache:
             self.stats.local_hits += 1
             return cache.get(key), pod, True
         self.stats.remote_loads += 1
         value = loader(key)
-        self.install(pod, key, value, size_of(value))
+        if not self.install(pod, key, value, size_of(value)):
+            # admission bypass: the value streams through uncached
+            return value, pod, False
         # install counts as first access
         return cache.get(key), pod, False
 
@@ -172,4 +215,7 @@ class PodLocalCacheRouter:
             "local_hit_rate": (self.stats.local_hits / self.stats.routed
                                if self.stats.routed else 0.0),
             "failovers": self.stats.failovers,
+            "admission": (self.admission.name if self.admission else None),
+            "admitted": self.stats.admitted,
+            "bypassed": self.stats.bypassed,
         }

@@ -9,6 +9,7 @@ RR, FIFO are the Table II ablations; Belady is a beyond-paper oracle bound.
 from __future__ import annotations
 
 import random
+from bisect import bisect_left
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.cache import CacheEntry
@@ -78,18 +79,40 @@ class RR(Policy):
 
 class Belady(Policy):
     """Oracle (beyond-paper upper bound): evicts the entry whose next use is
-    farthest in the future. Requires the future key sequence."""
+    farthest in the future. Requires the future key sequence.
+
+    Assigning :attr:`future` indexes it once into per-key sorted position
+    lists; each eviction then bisects against :attr:`cursor` — O(cache ×
+    log future) per victim instead of the old O(cache × future) linear
+    rescan of the remaining request stream. Advance ``cursor`` as requests
+    are consumed rather than re-assigning a sliced ``future``.
+    """
     name = "belady"
 
     def __init__(self, future: Optional[Sequence[str]] = None):
-        self.future: List[str] = list(future or [])
+        self.cursor = 0
+        self.future = list(future or [])   # property: builds the index
+
+    @property
+    def future(self) -> List[str]:
+        return self._future
+
+    @future.setter
+    def future(self, seq: Sequence[str]) -> None:
+        self._future = list(seq)
+        positions: Dict[str, List[int]] = {}
+        for i, k in enumerate(self._future):
+            positions.setdefault(k, []).append(i)
+        self._positions = positions
         self.cursor = 0
 
     def victim(self, entries):
         def next_use(key: str) -> int:
-            for i in range(self.cursor, len(self.future)):
-                if self.future[i] == key:
-                    return i
+            pos = self._positions.get(key)
+            if pos:
+                j = bisect_left(pos, self.cursor)
+                if j < len(pos):
+                    return pos[j]
             return 1 << 30
         return max(entries.values(), key=lambda e: next_use(e.key)).key
 

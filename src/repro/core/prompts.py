@@ -73,6 +73,49 @@ def update_decision_prompt(policy_text: str, loads: Sequence[str],
     return "".join(parts)
 
 
+ADMISSION_FEWSHOT = """Example 1:
+Admission policy: TinyLFU (admit only if the candidate's frequency is STRICTLY HIGHER than the victim's).
+Candidate key: fair1m-2021 (estimated frequency: 4)
+Eviction victim if admitted: modis-2016 (estimated frequency: 1)
+Thought: the candidate is clearly hotter than the victim, so caching it is worth an eviction.
+Answer: {"decision": "admit"}
+
+Example 2:
+Admission policy: TinyLFU (admit only if the candidate's frequency is STRICTLY HIGHER than the victim's).
+Candidate key: naip-2018 (estimated frequency: 1)
+Eviction victim if admitted: xview1-2022 (estimated frequency: 6)
+Thought: a one-shot key must not churn out a hot resident; stream it through instead.
+Answer: {"decision": "bypass"}
+"""
+
+
+def admission_decision_prompt(policy_text: str, key: str, victim: str,
+                              key_freq: int, victim_freq: int,
+                              cache_json: str, few_shot: bool) -> str:
+    """Prompt for the GPT-driven admission decision: given the admission
+    policy in natural language plus the frequency-sketch estimates, decide
+    whether to ADMIT the candidate into the cache (evicting the victim) or
+    BYPASS it (serve the data through without caching)."""
+    parts = [SYSTEM_HEADER,
+             "You are now the cache admission controller. A key was just "
+             "loaded from the database and the cache is FULL. Apply the "
+             "admission policy below and decide whether to ADMIT the "
+             "candidate into the cache (evicting the victim) or BYPASS the "
+             "cache (the data is served to the caller but nothing is "
+             "cached and no resident is evicted).\n",
+             f"Admission policy: {policy_text}\n"]
+    if few_shot:
+        parts.append(ADMISSION_FEWSHOT)
+    parts.append(f"Current cache: {cache_json}\n")
+    parts.append(f"Candidate key: {key} (estimated frequency: {key_freq})\n")
+    parts.append(f"Eviction victim if admitted: {victim} "
+                 f"(estimated frequency: {victim_freq})\n")
+    parts.append('Respond with a JSON object: {"decision": "admit"} or '
+                 '{"decision": "bypass"}.\n')
+    parts.append("Answer (JSON): ")
+    return "".join(parts)
+
+
 def parse_json_tail(text: str):
     """Parse the trailing JSON object/list from an LLM completion."""
     text = text.strip()

@@ -79,6 +79,47 @@ def make_cache_tools(cache, datastore, clock) -> List[ToolSpec]:
     ]
 
 
+def make_admission_tool(admission, sketch, entries_of, victim_of,
+                        capacity_of) -> ToolSpec:
+    """Admission as a callable cache op: ``cache_admit(key)`` answers
+    whether a freshly loaded ``key`` would be installed or bypassed, with
+    the evidence (victim + sketch estimates) the decision is based on.
+
+    Exposed in the same function-calling schema as ``read_cache`` /
+    ``load_db`` so the agent — or the GPT-driven controller — can query the
+    admission verdict like any other tool. ``entries_of(key)`` returns the
+    owning cache's entries, ``victim_of(key, entries)`` the would-be
+    eviction victim, ``capacity_of(key)`` the owning cache's capacity;
+    factoring these out lets the single-cache runtime and the pod-sharded
+    router share one implementation.
+    """
+
+    def cache_admit(key: str):
+        entries = entries_of(key)
+        kf = sketch.estimate(key) if sketch is not None else 0
+        if len(entries) < capacity_of(key):
+            return {"key": key, "decision": "admit", "victim": None,
+                    "key_freq": kf, "victim_freq": 0,
+                    "reason": "cache not full"}
+        victim = victim_of(key, entries)
+        ok = admission.admit(key, victim, sketch, entries)
+        vf = sketch.estimate(victim) if sketch is not None else 0
+        return {"key": key, "decision": "admit" if ok else "bypass",
+                "victim": victim, "key_freq": kf, "victim_freq": vf,
+                "reason": admission.name}
+
+    return ToolSpec(
+        name="cache_admit",
+        description=("Ask the cache ADMISSION policy whether loading "
+                     "`dataset-year` from the database would install it "
+                     "into the cache (evicting the named victim) or bypass "
+                     "the cache entirely (data streams through, residents "
+                     "untouched)."),
+        parameters={"key": {"type": "string",
+                            "description": "dataset-year, e.g. xview1-2022"}},
+        fn=cache_admit)
+
+
 class ToolRegistry:
     """Function-calling registry: schemas for the prompt, dispatch at runtime."""
 
