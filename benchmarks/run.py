@@ -43,6 +43,15 @@ def main() -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write wall/sim/speedup metrics per table as "
                          "JSON (perf trajectory tracking across PRs)")
+    ap.add_argument("--profile", action="store_true",
+                    help="include cumulative per-phase mechanism counters "
+                         "(engine events, coalesced generator steps, sketch "
+                         "touches/flushes, task-memo hits, ...) in the JSON "
+                         "record")
+    ap.add_argument("--pr3-grid", action="store_true",
+                    help="run exactly the PR-3 benchmark grid (no ISSUE-4 "
+                         "scale/adaptive/cost/replication cells) — the "
+                         "wall-budget and digest-lock reference")
     args = ap.parse_args()
 
     if args.json:
@@ -54,15 +63,20 @@ def main() -> None:
     conc_tasks = 50 if args.full else 25
 
     from benchmarks import tables
+    from repro.core import profiling
 
     t0 = time.time()
     sections = []
 
     def section(sid, title, fn, **kw):
         s0 = time.time()
+        p0 = profiling.snapshot()
         rows = fn(**kw)
-        sections.append({"id": sid, "name": title,
-                         "wall_s": round(time.time() - s0, 3), "rows": rows})
+        sec = {"id": sid, "name": title,
+               "wall_s": round(time.time() - s0, 3), "rows": rows}
+        if args.profile:
+            sec["profile"] = profiling.delta(p0, profiling.snapshot())
+        sections.append(sec)
 
     print(f"# LLM-dCache benchmarks (n_table1={n1}, n_ablation={n23})",
           flush=True)
@@ -74,15 +88,21 @@ def main() -> None:
             tables.table2, n=n23, parallel=par)
     section("table3", "Table III (GPT-driven vs programmatic)",
             tables.table3, n=n23, parallel=par)
+    pr3 = args.pr3_grid
     section("concurrency", "Concurrency (N sessions on the shared pod cache)",
             tables.table_concurrency, tasks_per_session=conc_tasks,
-            parallel=par)
+            parallel=par, **({"scale": ()} if pr3 else {}))
     section("prefetch", "Async prefetch (lazy vs plan-time pod loads)",
             tables.table_prefetch, tasks_per_session=conc_tasks,
-            parallel=par)
+            parallel=par, adaptive=not pr3)
     section("admission", "Cross-session admission (TinyLFU vs install-all)",
             tables.table_admission, tasks_per_session=conc_tasks,
-            parallel=par)
+            parallel=par, extras=not pr3)
+    if not pr3:
+        section("replication",
+                "Hot-key replication (epoch + spill, zipf-global)",
+                tables.table_replication, tasks_per_session=conc_tasks,
+                parallel=par)
     section("belady", "Beyond-paper: Belady oracle bound",
             tables.belady_bound, n=n23)
 
@@ -107,8 +127,11 @@ def main() -> None:
         conc_rows = by_id.get("concurrency", [])
         conc = [r.split(",") for r in conc_rows if r.startswith("concurrency")]
         conc_max = max(conc, key=lambda c: int(c[1])) if conc else None
-        pf_rows = [r.split(",") for r in by_id.get("prefetch", [])
-                   if r.startswith("prefetch,") and r.split(",")[3] == "prefetch"]
+        pf_all = [r.split(",") for r in by_id.get("prefetch", [])
+                  if r.startswith("prefetch,")]
+        pf_rows = [c for c in pf_all if c[3] == "prefetch"]
+        pf_adaptive = {(int(c[1]), int(c[2])): c for c in pf_all
+                       if c[3] == "adaptive"}
         # the <=2:1 grid rows (8 pods) vs the 4:1 saturation row (4 pods)
         pf_grid = [c for c in pf_rows if int(c[2]) == 8]
         pf_max = max(pf_grid, key=lambda c: int(c[1])) if pf_grid else None
@@ -118,13 +141,19 @@ def main() -> None:
                     if r.startswith("admission,")]
         adm_cell = {c[4]: c for c in adm_rows
                     if c[1] == "working-low" and c[2] == "16"}
+        adm_256 = {c[4]: c for c in adm_rows
+                   if c[1] == "working-low" and c[2] == "256"}
+        adm_wide = {c[4]: c for c in adm_rows if c[1] == "sized-wide"}
+        rep_rows = [r.split(",") for r in by_id.get("replication", [])
+                    if r.startswith("replication,")]
+        rep_cell = {c[4]: c for c in rep_rows if c[2] == "16"}
         record = {
-            "schema": "bench_dcache/v2",
+            "schema": "bench_dcache/v3",
             "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "platform": {"python": platform.python_version(),
                          "machine": platform.machine()},
             "args": {"full": args.full, "skip_jax": args.skip_jax,
-                     "parallel": args.parallel,
+                     "parallel": args.parallel, "pr3_grid": args.pr3_grid,
                      "n_table1": n1, "n_ablation": n23},
             "total_wall_s": round(total_wall, 3),
             "sections": [{"id": s["id"], "name": s["name"],
@@ -163,8 +192,38 @@ def main() -> None:
                                            cast=int),
                 "admission_llm_agreement_pct": _adm(adm_cell, "llm-tinylfu",
                                                     13),
+                # ISSUE-4 scale cells (batched sketch + de-Pythonized loop)
+                "admission_256_local_hit_pct": _adm(adm_256, "tinylfu", 6),
+                "admission_256_p95_s": _adm(adm_256, "tinylfu", 8),
+                # cost-aware ablation on the widened 10-208 MB band
+                "admission_cost_hit_delta_pp": _adm(adm_wide, "tinylfu-cost",
+                                                    16),
+                # adaptive depth guard: the recovered 8/8 mid-range win and
+                # the held 4:1 saturation cell
+                "prefetch_adaptive_p95_speedup_8_8": (
+                    float(pf_adaptive[(8, 8)][15])
+                    if (8, 8) in pf_adaptive else None),
+                "prefetch_adaptive_p95_speedup_4to1": (
+                    float(pf_adaptive[(16, 4)][15])
+                    if (16, 4) in pf_adaptive else None),
+                # hot-key replication, 16 sessions / 4 pods zipf-global:
+                # vs the same-admission baseline of the cell
+                "replication_hit_delta_pp": _adm(rep_cell, "tinylfu+repl",
+                                                 18),
+                "replication_p95_speedup": _adm(rep_cell, "tinylfu+repl",
+                                                17),
+                "replication_vs_none_hit_delta_pp": _adm(rep_cell, "repl",
+                                                         18),
+                "replication_llm_agreement_pct": _adm(rep_cell, "llm-repl",
+                                                      15),
             },
         }
+        if args.profile:
+            record["profile"] = {
+                s["id"]: s.get("profile", {}) for s in sections}
+            record["profile"]["cumulative"] = {
+                k: round(v, 6)
+                for k, v in sorted(profiling.COUNTERS.items())}
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)
             f.write("\n")

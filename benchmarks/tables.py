@@ -142,17 +142,31 @@ def table3(n: int = 200, parallel: bool = False) -> List[str]:
 
 def table_concurrency(tasks_per_session: int = 25,
                       sessions: Sequence[int] = (1, 2, 4, 8, 16),
-                      n_pods: int = 4, parallel: bool = False) -> List[str]:
+                      n_pods: int = 4,
+                      scale: Sequence[Sequence[int]] = ((128, 16),
+                                                       (256, 32)),
+                      parallel: bool = False) -> List[str]:
     """Beyond-paper: N concurrent sessions contending on the pod-sharded
     cache (the paper's "hundreds of GPT endpoints" regime). Latency
     percentiles are per-task simulated seconds; stalls are time spent
-    queued behind another session's DB load on the same pod."""
+    queued behind another session's DB load on the same pod.
+
+    The ``scale`` cells (128 and 256 sessions, pods scaled to keep the
+    8:1 pressure of the 4-pod grid's top cell) exist because of the
+    ISSUE-4 batching work — the per-clock-advance Python stepping of the
+    old engine capped the default bench at 64 sessions. They run 10 tasks
+    per session (the ``tasks`` column reports the total): session COUNT is
+    the scaled dimension, and a shorter stream keeps the default run's
+    wall budget. The original ``sessions`` x ``n_pods`` rows are
+    bit-identical to PR 3 (digest-locked)."""
     rows = ["table,n_sessions,n_pods,tasks,p50_s,p95_s,mean_s,makespan_s,"
             "throughput_tps,stall_total_s,stall_per_task_s,stalled_loads,"
             "total_loads,local_hit_pct,pod_imbalance,miss_replans"]
-    cells = [lambda ns=ns: run_episode(ns, tasks_per_session,
-                                       n_pods=n_pods, seed=0)
-             for ns in sessions]
+    configs = ([(ns, n_pods, tasks_per_session) for ns in sessions]
+               + [(c[0], c[1], min(10, tasks_per_session)) for c in scale])
+    cells = [lambda ns=ns, npod=npod, tps=tps: run_episode(
+                 ns, tps, n_pods=npod, seed=0)
+             for ns, npod, tps in configs]
     for res in _run_cells(cells, parallel):
         m = res.metrics
         rows.append(
@@ -170,6 +184,7 @@ def table_prefetch(tasks_per_session: int = 25,
                    sessions: Sequence[int] = (1, 4, 8, 16),
                    n_pods: int = 8,
                    saturated: Sequence[Sequence[int]] = ((16, 4),),
+                   adaptive: bool = True,
                    parallel: bool = False) -> List[str]:
     """Beyond-paper: lazy vs async-prefetch data plane on the event-granular
     engine. ``prefetch`` issues a session's planned ``load_db`` keys the
@@ -184,20 +199,33 @@ def table_prefetch(tasks_per_session: int = 25,
     + per-pod depth guard over observed service times — keeps p95 strictly
     reduced at <= 2:1 AND no worse than lazy at 4:1, where the old
     planning-latency budget shut prefetch off entirely. ``pf_skipped``
-    counts planned loads the budget left lazy."""
+    counts planned loads the budget left lazy.
+
+    The ``adaptive`` rows run the same cells with the ISSUE-4 adaptive
+    depth guard (``prefetch_adaptive=True``): the fixed threshold is
+    replaced by a proportional controller on the fleet's observed
+    stall-plus-late-prefetch rate, which lifts the guard in the mid-range
+    (recovering the 8/8 win the fixed guard trims) and clamps it past
+    saturation. The lazy/prefetch rows are bit-identical to PR 3."""
     rows = ["table,n_sessions,n_pods,mode,p50_s,p95_s,mean_s,stall_total_s,"
             "stalled_loads,pf_issued,pf_skipped,pf_hits,pf_wait_s,overlap_s,"
             "joined_loads,p95_speedup"]
     configs = [(ns, n_pods) for ns in sessions] + [tuple(c) for c in saturated]
-    cells = [lambda ns=ns, npod=npod, pf=pf: run_episode(
-                 ns, tasks_per_session, n_pods=npod, seed=0, prefetch=pf)
-             for ns, npod in configs for pf in (False, True)]
+    modes = (("lazy", {}), ("prefetch", {"prefetch": True}))
+    if adaptive:
+        modes += (("adaptive", {"prefetch": True,
+                                "prefetch_adaptive": True}),)
+    cells = [lambda ns=ns, npod=npod, kw=kw: run_episode(
+                 ns, tasks_per_session, n_pods=npod, seed=0, **kw)
+             for ns, npod in configs for _, kw in modes]
     results = _run_cells(cells, parallel)
+    nm = len(modes)
     for i, (ns, npod) in enumerate(configs):
-        lazy, pf = results[2 * i].metrics, results[2 * i + 1].metrics
-        for mode, m, sp in (("lazy", lazy, ""),
-                            ("prefetch", pf,
-                             f"{lazy.p95_task_latency_s / pf.p95_task_latency_s:.3f}")):
+        lazy = results[nm * i].metrics
+        for j, (mode, _) in enumerate(modes):
+            m = results[nm * i + j].metrics
+            sp = ("" if j == 0 else
+                  f"{lazy.p95_task_latency_s / m.p95_task_latency_s:.3f}")
             rows.append(
                 f"prefetch,{ns},{npod},{mode},{m.p50_task_latency_s:.3f},"
                 f"{m.p95_task_latency_s:.3f},{m.mean_task_latency_s:.3f},"
@@ -208,7 +236,7 @@ def table_prefetch(tasks_per_session: int = 25,
     return rows
 
 
-def table_admission(tasks_per_session: int = 25,
+def table_admission(tasks_per_session: int = 25, extras: bool = True,
                     parallel: bool = False) -> List[str]:
     """Beyond-paper: cross-session cache admission on the shared pod cache.
 
@@ -244,10 +272,27 @@ def table_admission(tasks_per_session: int = 25,
     ]
     grid = [(cfg, adm) for cfg in configs for adm in (None, "tinylfu")]
     grid.append((configs[0], "llm-tinylfu"))    # GPT-driven headline cell
+    # ISSUE-4 appendix rows (the PR-3 grid above is digest-locked):
+    # 128/256-session scale cells — feasible in the default run only
+    # because of the batched sketch + de-Pythonized event loop (they run
+    # 10 tasks/session: session count is the scaled dimension) — and the
+    # cost-aware ablation on a widened frame-size band (10-208 MB), where
+    # slot value = frequency x miss penalty has signal.
+    if extras:
+        scale_cfgs = [("working-low", {}, 128, 16, 0.3),
+                      ("working-low", {}, 256, 16, 0.3)]
+        grid += [(cfg, adm) for cfg in scale_cfgs
+                 for adm in (None, "tinylfu")]
+        wide = ("sized-wide", {"rows_range": (2_000, 40_000)}, 16, 4, 0.3)
+        grid += [(wide, adm) for adm in (None, "tinylfu", "tinylfu-cost")]
+    scale_tps = min(10, tasks_per_session)
     cells = [lambda cfg=cfg, adm=adm: run_episode(
-                 cfg[2], tasks_per_session, n_pods=cfg[3],
-                 reuse_rate=cfg[4], seed=0,
-                 admission=(None if adm is None else "tinylfu"),
+                 cfg[2],
+                 scale_tps if cfg[2] >= 128 else tasks_per_session,
+                 n_pods=cfg[3], reuse_rate=cfg[4], seed=0,
+                 admission=(None if adm is None else
+                            "tinylfu-cost" if adm == "tinylfu-cost" else
+                            "tinylfu"),
                  admission_impl=("llm" if adm == "llm-tinylfu"
                                  else "python"),
                  **cfg[1])
@@ -272,6 +317,79 @@ def table_admission(tasks_per_session: int = 25,
             f"{m.admitted},{m.bypassed},{m.bypass_reads},"
             f"{100 * m.admission_agreement:.2f},{m.admission_tokens},"
             f"{sp},{delta}")
+    return rows
+
+
+def table_replication(tasks_per_session: int = 25,
+                      parallel: bool = False) -> List[str]:
+    """Beyond-paper: cross-pod replication of super-hot keys (ISSUE 4).
+
+    Workload: globally-aligned zipf skew (``zipf_global=True`` — every
+    session agrees on which keys are hot, the paper's
+    many-endpoints-one-event regime; the per-session zipf of the admission
+    table leaves the *global* popularity field nearly flat). Each cell
+    pairs baselines against ``replication=True`` on the same seeds: the
+    :class:`~repro.core.replication.HotKeyReplicator` promotes
+    hot-but-homeless keys (epoch top-missed feed + admission-bypass spill),
+    placing bounded-fanout copies where the displaced resident is globally
+    coldest, and demotes by frequency hysteresis plus a usage veto.
+
+    Row semantics: ``hit_delta_pp``/``p95_speedup`` compare each row
+    against the *same-admission* baseline of its cell (tinylfu+repl vs
+    tinylfu; repl-only vs none), so the replication effect is isolated
+    from the admission effect. The acceptance cell is 16 sessions/4 pods:
+    tinylfu+repl must hold local hits strictly above tinylfu with p95 no
+    worse (install-everything+repl shows the bigger, seed-robust win:
+    +2-4 hit points, p95 reduced). The ``llm-repl`` row routes every
+    promote/drop/hold decision through the GPT prompt path, graded
+    against the programmatic threshold rule (``agreement_pct``)."""
+    rows = ["table,scenario,n_sessions,n_pods,config,local_hit_pct,p50_s,"
+            "p95_s,stall_total_s,replica_hits,replica_installs,"
+            "replica_drops,promotes,demotes,epochs,agreement_pct,"
+            "repl_tokens,p95_speedup,hit_delta_pp"]
+    zipfg = {"scenario": "zipf",
+             "scenario_kw": {"zipf_a": 1.1, "zipf_global": True}}
+    # measured operating point (see repro/core/replication.py)
+    rkw = {"epoch_s": 20.0, "max_replicated": 10, "promote_min": 4,
+           "miss_min": 2, "gain_ratio": 2.0}
+    # (config label, engine kwargs, baseline config label for deltas)
+    modes = [
+        ("none", {}, None),
+        ("repl", {"replication": True, "replication_kw": rkw}, "none"),
+        ("tinylfu", {"admission": "tinylfu"}, None),
+        ("tinylfu+repl", {"admission": "tinylfu", "replication": True,
+                          "replication_kw": rkw}, "tinylfu"),
+        ("llm-repl", {"admission": "tinylfu", "replication": True,
+                      "replication_impl": "llm", "replication_kw": rkw},
+         "tinylfu"),
+    ]
+    configs = [(16, 4), (64, 8)]
+    cells = [lambda ns=ns, npod=npod, kw=kw: run_episode(
+                 ns, tasks_per_session, n_pods=npod, reuse_rate=0.3,
+                 seed=0, **dict(zipfg, **kw))
+             for ns, npod in configs for _, kw, _b in modes]
+    results = _run_cells(cells, parallel)
+    nm = len(modes)
+    for i, (ns, npod) in enumerate(configs):
+        base = {label: results[nm * i + j].metrics
+                for j, (label, _, _b) in enumerate(modes)}
+        for label, _, bline in modes:
+            m = base[label]
+            if bline is None:
+                sp = delta = ""
+            else:
+                b = base[bline]
+                sp = f"{b.p95_task_latency_s / m.p95_task_latency_s:.3f}"
+                delta = f"{100 * (m.local_hit_rate - b.local_hit_rate):.2f}"
+            rows.append(
+                f"replication,zipfg-1.1,{ns},{npod},{label},"
+                f"{100 * m.local_hit_rate:.2f},{m.p50_task_latency_s:.3f},"
+                f"{m.p95_task_latency_s:.3f},{m.total_stall_s:.3f},"
+                f"{m.replica_hits},{m.replica_installs},{m.replica_drops},"
+                f"{m.replication_promotes},{m.replication_demotes},"
+                f"{m.replication_epochs},"
+                f"{100 * m.replication_agreement:.2f},"
+                f"{m.replication_tokens},{sp},{delta}")
     return rows
 
 

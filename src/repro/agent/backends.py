@@ -78,6 +78,8 @@ class SimLLM:
             return self._update_decision(prompt)
         if "ADMIT the candidate" in prompt:
             return self._admission_decision(prompt)
+        if "REPLICATION controller" in prompt:
+            return self._replication_decision(prompt)
         # planning / answer prompts: canned completion (token accounting is
         # handled by the agent's latency model)
         return ("Thought: I will decompose the task and call the tools in "
@@ -153,6 +155,34 @@ class SimLLM:
         decision = "admit" if admit else "bypass"
         return ("Thought: weighing the candidate's frequency against the "
                 "victim's under the stated policy.\n"
+                f'Answer: {json.dumps({"decision": decision})}')
+
+    # -- hot-key REPLICATION -------------------------------------------------
+    def _replication_decision(self, prompt: str) -> str:
+        """Replication decided by reading the policy text: the sketch
+        estimate, current replica state and thresholds are all in the
+        prompt; the calibrated error rate applies (a slip lands on the
+        nearest wrong decision — promoting a cold key or holding a hot
+        one — never on the opposite extreme)."""
+        freq, rep = re.findall(
+            r"Key: \S+ \(estimated frequency: (\d+); currently "
+            r"replicated: (yes|no)\)", prompt)[-1]
+        freq, replicated = int(freq), rep == "yes"
+        promote = int(re.findall(r"replicate at >= (\d+)", prompt)[-1])
+        demote = int(re.findall(r"drop a replica at < (\d+)", prompt)[-1])
+        if not replicated:
+            decision = "replicate" if freq >= promote else "hold"
+        elif freq < demote:
+            decision = "drop"
+        else:
+            decision = "hold"
+        if self.rng.random() < self.profile.cache_eps:
+            if decision == "hold":
+                decision = "drop" if replicated else "replicate"
+            else:
+                decision = "hold"
+        return ("Thought: comparing the key's frequency against the "
+                "promote/demote thresholds.\n"
                 f'Answer: {json.dumps({"decision": decision})}')
 
     def _victim(self, state: Dict[str, dict], policy_text: str,

@@ -62,7 +62,7 @@ class GeoFrame:
     be shared between callers (the bbox memo relies on this).
     """
 
-    __slots__ = ("key", "_base", "_index", "_cols", "_bbox_memo")
+    __slots__ = ("key", "_base", "_index", "_cols", "_bbox_memo", "_op_memo")
 
     def __init__(self, key: str, filename: np.ndarray, lon: np.ndarray,
                  lat: np.ndarray, timestamp: np.ndarray,
@@ -76,6 +76,7 @@ class GeoFrame:
         self._index: Optional[np.ndarray] = None   # None -> root frame
         self._cols: Dict[str, np.ndarray] = {}
         self._bbox_memo: Dict[tuple, "GeoFrame"] = {}
+        self._op_memo: Dict[tuple, object] = {}
 
     # -- lazy columns --------------------------------------------------------
     def _col(self, name: str) -> np.ndarray:
@@ -142,7 +143,23 @@ class GeoFrame:
         view._index = idx if self._index is None else self._index[idx]
         view._cols = {}
         view._bbox_memo = {}
+        view._op_memo = {}
         return view
+
+    def memo_op(self, op_key: tuple, fn):
+        """Memoise a deterministic pure operation on this (immutable) frame.
+
+        Filters, sorts and aggregations over a frame are pure functions of
+        its contents, and the bbox memo already shares ROI views across
+        every consumer of a root frame — so memoising per (view, op, args)
+        makes the whole benchmark grid share one physical execution of each
+        distinct tool computation (the gold executor and every benchmark
+        cell replay the same plans). Callers that return mutable containers
+        copy on the way out; frame results are immutable shared views."""
+        hit = self._op_memo.get(op_key)
+        if hit is None:
+            hit = self._op_memo[op_key] = fn()
+        return hit
 
     def _mask(self, m: np.ndarray) -> "GeoFrame":
         return self._take(np.flatnonzero(m))
@@ -159,11 +176,14 @@ class GeoFrame:
         return hit
 
     def filter_class(self, class_name: str) -> "GeoFrame":
-        m = self.class_id == CLASSES.index(class_name)
-        return self._mask(m)
+        return self.memo_op(
+            ("class", class_name),
+            lambda: self._mask(self.class_id == CLASSES.index(class_name)))
 
     def filter_clouds(self, max_pct: float) -> "GeoFrame":
-        return self._mask(self.cloud_pct <= max_pct)
+        return self.memo_op(
+            ("clouds", max_pct),
+            lambda: self._mask(self.cloud_pct <= max_pct))
 
 
 def _seed_for(key: str) -> int:
@@ -171,18 +191,45 @@ def _seed_for(key: str) -> int:
                                           digest_size=4).digest(), "big")
 
 
+def _filenames(dataset: str, year: str, n: int) -> np.ndarray:
+    """``{dataset}_{year}_%06d.tif`` for 0..n-1, built as raw UCS4 code
+    points and viewed as a unicode array — element-for-element identical to
+    ``np.char.mod`` but ~30x faster (the per-element C format loop was the
+    single largest cost of synthesising a root frame)."""
+    prefix = f"{dataset}_{year}_"
+    suffix = ".tif"
+    assert n < 10 ** 6            # %06d: six digits always
+    width = len(prefix) + 6 + len(suffix)
+    codes = np.empty((n, width), dtype=np.uint32)
+    codes[:, :len(prefix)] = np.frombuffer(
+        prefix.encode("utf-32-le"), dtype=np.uint32)
+    digits = np.arange(n, dtype=np.int64)
+    for j in range(5, -1, -1):
+        codes[:, len(prefix) + j] = 48 + digits % 10      # ord('0') == 48
+        digits //= 10
+    codes[:, len(prefix) + 6:] = np.frombuffer(
+        suffix.encode("utf-32-le"), dtype=np.uint32)
+    return codes.view(f"<U{width}").ravel()
+
+
 # process-wide root-frame memo: synth_frame is deterministic and frames are
-# immutable, so every datastore/benchmark cell can share one instance per key
-_FRAME_MEMO: Dict[str, GeoFrame] = {}
+# immutable, so every datastore/benchmark cell can share one instance per
+# (key, rows_range) — the default band and the widened cost-ablation band
+# coexist without collision
+_FRAME_MEMO: Dict[tuple, GeoFrame] = {}
+
+DEFAULT_ROWS_RANGE = (12_000, 18_000)   # ~62-94 MB at 5200 B/row
 
 
-def synth_frame(key: str) -> GeoFrame:
-    cached = _FRAME_MEMO.get(key)
+def synth_frame(key: str, rows_range: Optional[tuple] = None) -> GeoFrame:
+    memo_key = (key, rows_range)
+    cached = _FRAME_MEMO.get(memo_key)
     if cached is not None:
         return cached
     rng = np.random.default_rng(_seed_for(key))
     dataset, year = key.rsplit("-", 1)
-    n = int(rng.integers(12_000, 18_000))
+    lo, hi = rows_range or DEFAULT_ROWS_RANGE
+    n = int(rng.integers(lo, hi))
     # spatially skewed around regions of interest (the paper's observation)
     centers = np.array([[(b[0] + b[2]) / 2, (b[1] + b[3]) / 2]
                         for b in REGIONS.values()])
@@ -193,29 +240,36 @@ def synth_frame(key: str) -> GeoFrame:
     ts = t0 + rng.integers(0, 365 * 24 * 3600, n)
     frame = GeoFrame(
         key=key,
-        filename=np.char.mod(f"{dataset}_{year}_%06d.tif", np.arange(n)),
+        filename=_filenames(dataset, year, n),
         lon=lon, lat=lat, timestamp=ts,
         class_id=rng.integers(0, len(CLASSES), n).astype(np.int8),
         det_count=rng.integers(0, 40, n).astype(np.int16),
         land_cover=rng.integers(0, len(LAND_COVERS), n).astype(np.int8),
         cloud_pct=rng.uniform(0, 100, n).astype(np.float32),
     )
-    _FRAME_MEMO[key] = frame
+    _FRAME_MEMO[memo_key] = frame
     return frame
 
 
 class GeoDataStore:
     """Main memory. ``load`` charges DB latency; frames are memoised host-side
-    (the memo is the *data platform's* store, not the LLM-visible cache)."""
+    (the memo is the *data platform's* store, not the LLM-visible cache).
 
-    def __init__(self, clock):
+    ``rows_range`` widens (or narrows) the per-frame row-count band — the
+    cost-aware admission ablation uses a wide band so frame sizes diverge
+    enough for size-weighted decisions to have signal. ``None`` keeps the
+    default 12-18k band (62-94 MB), bit-identical to the original store.
+    """
+
+    def __init__(self, clock, rows_range: Optional[tuple] = None):
         self.clock = clock
         self.loads = 0
+        self.rows_range = rows_range
 
     def _frame(self, key: str) -> GeoFrame:
         if key not in _ALL_KEYS:
             raise KeyError(f"unknown dataset-year {key!r}")
-        return synth_frame(key)
+        return synth_frame(key, self.rows_range)
 
     def load(self, key: str) -> GeoFrame:
         f = self._frame(key)

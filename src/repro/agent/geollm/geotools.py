@@ -47,8 +47,13 @@ def filter_clouds(frame, max_pct: float) -> GeoFrame:
 
 def filter_date_range(frame, start_month: int, end_month: int) -> GeoFrame:
     f = _require_frame(frame)
-    month = ((f.timestamp // (30 * 24 * 3600)) % 12) + 1
-    return f._mask((month >= int(start_month)) & (month <= int(end_month)))
+    m0, m1 = int(start_month), int(end_month)
+
+    def compute():
+        month = ((f.timestamp // (30 * 24 * 3600)) % 12) + 1
+        return f._mask((month >= m0) & (month <= m1))
+
+    return f.memo_op(("date_range", m0, m1), compute)
 
 
 def count_images(frame) -> int:
@@ -60,34 +65,53 @@ def detect_objects(frame, class_name: str) -> Dict:
     f = _require_frame(frame)
     if class_name not in CLASSES:
         raise ToolError(f"unknown class {class_name!r}")
-    sub = f.filter_class(class_name)
-    return {"class": class_name, "images": len(sub),
-            "detections": int(sub.det_count.sum())}
+
+    def compute():
+        sub = f.filter_class(class_name)
+        return {"class": class_name, "images": len(sub),
+                "detections": int(sub.det_count.sum())}
+
+    return dict(f.memo_op(("detect", class_name), compute))
 
 
 def land_cover_stats(frame) -> Dict[str, float]:
     f = _require_frame(frame)
-    if len(f) == 0:
-        return {c: 0.0 for c in LAND_COVERS}
-    counts = np.bincount(f.land_cover, minlength=len(LAND_COVERS))
-    return {c: float(counts[i]) / len(f) for i, c in enumerate(LAND_COVERS)}
+
+    def compute():
+        if len(f) == 0:
+            return {c: 0.0 for c in LAND_COVERS}
+        counts = np.bincount(f.land_cover, minlength=len(LAND_COVERS))
+        return {c: float(counts[i]) / len(f)
+                for i, c in enumerate(LAND_COVERS)}
+
+    return dict(f.memo_op(("lcc_stats",), compute))
 
 
 def dominant_land_covers(frame, top_k: int = 2) -> List[str]:
-    stats = land_cover_stats(frame)
-    return sorted(stats, key=stats.get, reverse=True)[: int(top_k)]
+    f = _require_frame(frame)
+    k = int(top_k)
+
+    def compute():
+        stats = land_cover_stats(f)
+        return sorted(stats, key=stats.get, reverse=True)[:k]
+
+    return list(f.memo_op(("lcc_top", k), compute))
 
 
 def vqa_answer(frame, question: str) -> str:
     """Template VQA over frame statistics (deterministic)."""
     f = _require_frame(frame)
-    n = len(f)
-    dets = int(f.det_count.sum())
-    covers = dominant_land_covers(f, 2)
-    cloudy = float((f.cloud_pct > 50).mean()) if n else 0.0
-    return (f"the region contains {n} images with {dets} detected objects ; "
-            f"dominant land cover is {covers[0]} followed by {covers[1]} ; "
-            f"{cloudy:.0%} of scenes are cloudy")
+
+    def compute():
+        n = len(f)
+        dets = int(f.det_count.sum())
+        covers = dominant_land_covers(f, 2)
+        cloudy = float((f.cloud_pct > 50).mean()) if n else 0.0
+        return (f"the region contains {n} images with {dets} detected "
+                f"objects ; dominant land cover is {covers[0]} followed by "
+                f"{covers[1]} ; {cloudy:.0%} of scenes are cloudy")
+
+    return f.memo_op(("vqa",), compute)
 
 
 def image_stats(frame) -> Dict:
@@ -104,7 +128,9 @@ def sample_images(frame, k: int = 5) -> List[str]:
 
 def sort_by_time(frame) -> GeoFrame:
     f = _require_frame(frame)
-    return f._take(np.argsort(f.timestamp, kind="stable"))
+    return f.memo_op(
+        ("sort_time",),
+        lambda: f._take(np.argsort(f.timestamp, kind="stable")))
 
 
 def merge_frames(frame_a, frame_b) -> GeoFrame:
@@ -132,10 +158,14 @@ def plot_heatmap(frame, value: str = "detections") -> str:
 
 def timeseries(frame, freq: str = "month") -> List[int]:
     f = _require_frame(frame)
-    if len(f) == 0:
-        return []
-    month = ((f.timestamp // (30 * 24 * 3600)) % 12).astype(int)
-    return np.bincount(month, minlength=12).tolist()
+
+    def compute():
+        if len(f) == 0:
+            return []
+        month = ((f.timestamp // (30 * 24 * 3600)) % 12).astype(int)
+        return np.bincount(month, minlength=12).tolist()
+
+    return list(f.memo_op(("timeseries", freq), compute))
 
 
 _ML_LATENCY = 0.12   # detector / classifier endpoints

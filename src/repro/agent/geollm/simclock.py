@@ -73,7 +73,8 @@ class SimClock:
 
 @dataclasses.dataclass(frozen=True)
 class Event:
-    """One scheduled event.
+    """One scheduled event (the *wrapper* view; the heap stores plain
+    tuples — see :class:`EventQueue`).
 
     Ordering is (time, priority, tiebreak): lower priority values run first
     at equal times (e.g. pod-load completions *before* session resumes, so a
@@ -93,16 +94,21 @@ class Event:
 class EventQueue:
     """Deterministic time-ordered event heap for discrete-event simulation.
 
-    ``push``/``pop`` are O(log n); the pop order is the total order defined
-    by :meth:`Event.sort_key`, never heap insertion order, so simulations
-    driven off this queue are bit-reproducible.
+    ``push``/``pop`` are O(log n); the pop order is the total order
+    (time, priority, tiebreak, insertion-seq), never heap insertion order,
+    so simulations driven off this queue are bit-reproducible.
+
+    The heap holds plain ``(time, priority, tiebreak, seq, payload)``
+    tuples — no per-event object allocation on the hot path (the concurrent
+    engine pushes/pops one event per clock advance). ``pop``/``peek``/
+    ``drain`` wrap the tuple in an :class:`Event` for callers that want the
+    named view; :meth:`pop_payload` is the allocation-free fast path the
+    scheduler uses. The unique ``seq`` component also guarantees the tuple
+    comparison never reaches ``payload`` (which may be unorderable).
     """
 
     def __init__(self) -> None:
-        # heap keys carry the insertion sequence as a final component so
-        # events with identical (time, priority, tiebreak) never fall
-        # through to comparing Event objects (which have no ordering)
-        self._heap: List[Tuple[Tuple[float, int, int, int], Event]] = []
+        self._heap: List[Tuple[float, int, int, int, Any]] = []
         self._seq = 0
 
     def __len__(self) -> int:
@@ -112,19 +118,31 @@ class EventQueue:
         return bool(self._heap)
 
     def push(self, time: float, priority: int = 0,
-             tiebreak: Optional[int] = None, payload: Any = None) -> Event:
-        if tiebreak is None:
-            tiebreak = self._seq
-        ev = Event(time, priority, tiebreak, payload)
-        heapq.heappush(self._heap, (ev.sort_key() + (self._seq,), ev))
-        self._seq += 1
-        return ev
+             tiebreak: Optional[int] = None, payload: Any = None) -> None:
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap,
+                       (time, priority, seq if tiebreak is None else tiebreak,
+                        seq, payload))
 
     def pop(self) -> Event:
-        return heapq.heappop(self._heap)[1]
+        t, pri, tb, _, payload = heapq.heappop(self._heap)
+        return Event(t, pri, tb, payload)
+
+    def pop_payload(self) -> Any:
+        """Pop the next event, returning only its payload (the scheduler's
+        fast path — same total order as :meth:`pop`)."""
+        return heapq.heappop(self._heap)[4]
+
+    def pop_timed(self) -> Tuple[float, Any]:
+        """Pop the next event as ``(time, payload)`` — the scheduler's fast
+        path when it also drives time-epoch work (e.g. the replicator)."""
+        item = heapq.heappop(self._heap)
+        return item[0], item[4]
 
     def peek(self) -> Event:
-        return self._heap[0][1]
+        t, pri, tb, _, payload = self._heap[0]
+        return Event(t, pri, tb, payload)
 
     def drain(self) -> Iterator[Event]:
         """Pop events in order until the queue is empty (events pushed

@@ -145,6 +145,7 @@ class WorkloadSampler:
 
     def __init__(self, reuse_rate: float = 0.8, seed: int = 0,
                  scenario: str = "working", zipf_a: float = 1.2,
+                 zipf_global: bool = False,
                  hot_k: int = 4, hot_p: float = 0.9, phase_len: int = 60):
         self.reuse_rate = reuse_rate
         self.rng = random.Random(seed)
@@ -154,9 +155,17 @@ class WorkloadSampler:
         if scenario == "zipf":
             # seed-shuffled rank order (drawn from a separate RNG so the
             # "working" draw stream stays byte-identical to pre-scenario
-            # code); cumulative weights for rng.choices' internal bisect
+            # code); cumulative weights for rng.choices' internal bisect.
+            # ``zipf_global=True`` fixes the rank order across ALL sessions
+            # (seed-independent shuffle): every session then agrees on
+            # which keys are hot — the paper's many-endpoints-one-event
+            # regime, and the workload where cross-pod replication of
+            # super-hot keys has real signal. The default (per-session
+            # order) keeps each session's skew private, so the *global*
+            # popularity field stays nearly flat even at high zipf_a.
             order = list(self.keys)
-            random.Random(seed ^ 0x5EED).shuffle(order)
+            random.Random(0x5EED if zipf_global else seed ^ 0x5EED
+                          ).shuffle(order)
             self._zipf_keys = order
             w = [1.0 / (r + 1) ** zipf_a for r in range(len(order))]
             self._zipf_cum = list(itertools.accumulate(w))

@@ -21,18 +21,30 @@ programmatic ``admit()`` and a natural-language ``describe()``; the
 GPT-driven path (:class:`LLMAdmission`) renders ``describe()`` plus the
 sketch estimates into a prompt and lets the LLM make the call — exactly how
 the paper's prompted eviction works, extended to admission.
+
+Batched hot path (ISSUE 4): touches are *deferred* — ``touch``/``touch_many``
+append interned key ids to a buffer, and the buffer is flushed (applied in
+exact arrival order, preserving conservative-update semantics bit-for-bit)
+only at a read boundary: an ``estimate``/``estimate_many``/``top_k`` call, an
+aging epoch, or buffer overflow. Between boundaries the per-access cost is an
+append plus one dict lookup instead of a blake2 hash and three numpy
+small-array ops, which is what lets the concurrent engine scale to 256
+sessions. Counters live in a flat Python list (scalar reads beat numpy
+fancy-indexing at depth=4); ``table`` materialises the numpy view on demand
+and aging/top-k remain vectorized.
 """
 from __future__ import annotations
 
 import hashlib
 import json
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 DEFAULT_WIDTH = 1024
 DEFAULT_DEPTH = 4
 DEFAULT_AGE_PERIOD_S = 180.0
+FLUSH_BUFFER_MAX = 8192      # flush the deferred-touch buffer at this size
 
 
 class FrequencySketch:
@@ -44,8 +56,13 @@ class FrequencySketch:
     seconds — callers pass ``now`` from their sim clock (the concurrent
     engine passes session clocks, which only execute at the global-minimum
     time, so touches arrive in nondecreasing order) or construct with a
-    ``clock`` callable. All table operations are vectorized numpy; hashing
-    is blake2b so estimates are deterministic across runs and machines.
+    ``clock`` callable. Hashing is blake2b so estimates are deterministic
+    across runs and machines.
+
+    Touches are buffered and applied lazily (see module docstring): every
+    read (``estimate*``/``top_k``) and every aging boundary flushes the
+    buffer first, in arrival order, so observable estimates are exactly
+    those of the old touch-immediately implementation.
     """
 
     def __init__(self, width: int = DEFAULT_WIDTH, depth: int = DEFAULT_DEPTH,
@@ -55,22 +72,62 @@ class FrequencySketch:
         self.depth = depth
         self.age_period_s = age_period_s
         self._clock = clock
-        self.table = np.zeros((depth, width), dtype=np.uint32)
+        # authoritative counters: flat Python ints (row * width + col).
+        # Scalar list ops are ~10x cheaper than numpy fancy-indexing for
+        # depth-sized reads; aging round-trips through numpy (vectorized).
+        self._flat: List[int] = [0] * (depth * width)
         self._rows = np.arange(depth)
-        self._idx_memo: Dict[str, np.ndarray] = {}
+        # interning: key -> dense id; per-id flat cell indices (tuple for the
+        # flush loop) + a lazily rebuilt (n_keys, depth) matrix for top_k
+        self._key_id: Dict[str, int] = {}
+        self._id_key: List[str] = []
+        self._id_cells: List[Tuple[int, ...]] = []
+        self._idx_matrix: Optional[np.ndarray] = None
+        self._buf: List[int] = []
         self._last_age = 0.0
         self.touches = 0
         self.ages = 0
+        self.flushes = 0
 
-    def _indices(self, key: str) -> np.ndarray:
-        idx = self._idx_memo.get(key)
-        if idx is None:
+    # -- interning / hashing --------------------------------------------------
+    def _intern(self, key: str) -> int:
+        kid = self._key_id.get(key)
+        if kid is None:
             h = hashlib.blake2b(key.encode(),
                                 digest_size=8 * self.depth).digest()
-            idx = (np.frombuffer(h, dtype=np.uint64)
-                   % np.uint64(self.width)).astype(np.int64)
-            self._idx_memo[key] = idx
-        return idx
+            cols = np.frombuffer(h, dtype=np.uint64) % np.uint64(self.width)
+            kid = len(self._id_key)
+            self._key_id[key] = kid
+            self._id_key.append(key)
+            self._id_cells.append(tuple(
+                int(r) * self.width + int(c) for r, c in zip(self._rows, cols)))
+            self._idx_matrix = None      # stale; rebuilt on next top_k
+        return kid
+
+    def _indices(self, key: str) -> np.ndarray:
+        """Per-row column indices of ``key`` (kept for tests/diagnostics)."""
+        cells = self._id_cells[self._intern(key)]
+        return np.array([c % self.width for c in cells], dtype=np.int64)
+
+    # -- deferred-touch buffer ------------------------------------------------
+    def flush(self) -> None:
+        """Apply buffered touches in exact arrival order (conservative
+        update: only the minimum cells increment — order-exact, so estimates
+        match the touch-immediately implementation bit-for-bit)."""
+        buf = self._buf
+        if not buf:
+            return
+        flat = self._flat
+        cells_of = self._id_cells
+        for kid in buf:
+            cells = cells_of[kid]
+            vals = [flat[c] for c in cells]
+            lo = min(vals)
+            for c, v in zip(cells, vals):
+                if v == lo:
+                    flat[c] = v + 1
+        buf.clear()
+        self.flushes += 1
 
     def _maybe_age(self, now: Optional[float]) -> None:
         if now is None:
@@ -82,23 +139,89 @@ class FrequencySketch:
             self._last_age += self.age_period_s
 
     def age(self) -> None:
-        """TinyLFU reset: halve every counter (vectorized)."""
-        self.table >>= 1
+        """TinyLFU reset: halve every counter (vectorized). Flushes first —
+        buffered touches arrived before this aging boundary."""
+        self.flush()
+        arr = np.asarray(self._flat, dtype=np.uint64) >> 1
+        self._flat = arr.tolist()
         self.ages += 1
 
     def touch(self, key: str, now: Optional[float] = None) -> None:
-        """Record one access. Conservative update: only the minimum cells
-        increment, which tightens estimates without losing the count-min
-        overestimate guarantee."""
+        """Record one access (deferred; see ``flush``)."""
         self._maybe_age(now)
-        idx = self._indices(key)
-        cells = self.table[self._rows, idx]
-        lo = cells.min()
-        self.table[self._rows, idx] = np.where(cells == lo, cells + 1, cells)
+        self._buf.append(self._intern(key))
         self.touches += 1
+        if len(self._buf) >= FLUSH_BUFFER_MAX:
+            self.flush()
+
+    def touch_many(self, keys: Sequence[str],
+                   now: Optional[float] = None) -> None:
+        """Record one access per key, in order (single aging check — the
+        batch shares one timestamp, like a read plan's key walk)."""
+        self._maybe_age(now)
+        intern = self._intern
+        self._buf.extend(intern(k) for k in keys)
+        self.touches += len(keys)
+        if len(self._buf) >= FLUSH_BUFFER_MAX:
+            self.flush()
+
+    # -- reads (flush boundaries) ---------------------------------------------
+    def _estimate_interned(self, kid: int) -> int:
+        flat = self._flat
+        return min(flat[c] for c in self._id_cells[kid])
 
     def estimate(self, key: str) -> int:
-        return int(self.table[self._rows, self._indices(key)].min())
+        self.flush()
+        return self._estimate_interned(self._intern(key))
+
+    def estimate_many(self, keys: Sequence[str]) -> List[int]:
+        """Batched estimates: one flush, then scalar reads per key."""
+        self.flush()
+        return [self._estimate_interned(self._intern(k)) for k in keys]
+
+    def estimate_peek(self, key: str) -> int:
+        """Estimate WITHOUT interning: a never-touched key queried here
+        does not join the ``top_k`` candidate population (diagnostic
+        surfaces like the ``cache_replicate`` tool must be side-effect
+        free)."""
+        kid = self._key_id.get(key)
+        if kid is not None:
+            self.flush()
+            return self._estimate_interned(kid)
+        h = hashlib.blake2b(key.encode(),
+                            digest_size=8 * self.depth).digest()
+        cols = np.frombuffer(h, dtype=np.uint64) % np.uint64(self.width)
+        self.flush()
+        flat = self._flat
+        return min(flat[int(r) * self.width + int(c)]
+                   for r, c in zip(self._rows, cols))
+
+    def top_k(self, k: int = 8) -> List[Tuple[str, int]]:
+        """The ``k`` hottest *interned* keys by estimate, hottest first
+        (ties broken by key for determinism). Only keys ever touched or
+        estimated are candidates — exactly the population the admission
+        and replication layers care about. Vectorized over the interned
+        index matrix; this is the replicator's epoch feed."""
+        self.flush()
+        n = len(self._id_key)
+        if n == 0 or k <= 0:
+            return []
+        if self._idx_matrix is None or len(self._idx_matrix) != n:
+            self._idx_matrix = np.asarray(self._id_cells, dtype=np.int64)
+        est = np.asarray(self._flat, dtype=np.int64)[
+            self._idx_matrix].min(axis=1)
+        k = min(k, n)
+        order = np.lexsort((np.array(self._id_key), -est))[:k]
+        return [(self._id_key[i], int(est[i])) for i in order]
+
+    @property
+    def table(self) -> np.ndarray:
+        """Materialised (depth, width) numpy view of the counters (flushes
+        pending touches first; intended for tests/diagnostics, not the hot
+        path)."""
+        self.flush()
+        return np.asarray(self._flat, dtype=np.uint32).reshape(
+            self.depth, self.width)
 
 
 def entries_json(entries) -> str:
@@ -125,7 +248,7 @@ class AdmissionPolicy:
     name = "base"
 
     def admit(self, key: str, victim: str, sketch: Optional[FrequencySketch],
-              entries) -> bool:
+              entries, size_bytes: Optional[int] = None) -> bool:
         raise NotImplementedError
 
     def describe(self) -> str:
@@ -137,7 +260,7 @@ class AdmitAll(AdmissionPolicy):
 
     name = "always"
 
-    def admit(self, key, victim, sketch, entries):
+    def admit(self, key, victim, sketch, entries, size_bytes=None):
         return True
 
     def describe(self):
@@ -152,10 +275,11 @@ class TinyLFU(AdmissionPolicy):
 
     name = "tinylfu"
 
-    def admit(self, key, victim, sketch, entries):
+    def admit(self, key, victim, sketch, entries, size_bytes=None):
         if sketch is None:
             return True
-        return sketch.estimate(key) > sketch.estimate(victim)
+        kf, vf = sketch.estimate_many((key, victim))   # one buffer flush
+        return kf > vf
 
     def describe(self):
         return ("TinyLFU admission: when the cache is full, compare the "
@@ -167,13 +291,60 @@ class TinyLFU(AdmissionPolicy):
                 "resident entry untouched.")
 
 
+class TinyLFUCost(AdmissionPolicy):
+    """Cost-aware admission (GDSF-inspired, adapted to slot capacity):
+    weight frequency by the entry's modeled *miss penalty*.
+
+    Classic GDSF divides frequency by size because its cache is
+    byte-bounded — small hot objects pack better. Ours is ENTRY-bounded
+    (the paper's 5-slot cache): size buys no packing, but it does set the
+    cost of every future miss (DB load time grows with frame size). The
+    slot-value of an entry is therefore ``frequency x miss_penalty``, with
+    ``miss_penalty ~ BASE_BYTES + size_bytes`` (the fixed per-load overhead
+    — network/round-trip, ~0.62 s at 0.003 s/MB, i.e. ~200 MB-equivalent —
+    plus the size-proportional transfer). Admit only when the candidate's
+    slot-value strictly beats the victim's; exact integer cross-multiply,
+    no float division. When either size is unknown it degrades to the
+    plain TinyLFU frequency comparison. The ablation only has signal once
+    frame sizes diverge (see the engine's ``rows_range`` widened band).
+    """
+
+    name = "tinylfu-cost"
+    BASE_BYTES = 200_000_000     # fixed per-load overhead, in size units
+
+    def admit(self, key, victim, sketch, entries, size_bytes=None):
+        if sketch is None:
+            return True
+        kf, vf = sketch.estimate_many((key, victim))
+        ventry = entries.get(victim) if entries else None
+        vsize = getattr(ventry, "size_bytes", 0) if ventry else 0
+        if not size_bytes or not vsize:
+            return kf > vf                 # sizes unknown: plain TinyLFU
+        return (kf * (self.BASE_BYTES + size_bytes)
+                > vf * (self.BASE_BYTES + vsize))
+
+    def describe(self):
+        return ("Cost-aware TinyLFU admission: when the cache is full, "
+                "compare SLOT VALUE — the candidate's estimated access "
+                "frequency times its miss penalty (a fixed per-load "
+                "overhead plus its size in bytes) against the eviction "
+                "victim's frequency times the victim's miss penalty. ADMIT "
+                "(evict the victim, install the candidate) only if the "
+                "candidate's slot value is STRICTLY HIGHER; otherwise "
+                "BYPASS the cache — stream the loaded data through to the "
+                "caller without caching it, leaving every resident entry "
+                "untouched. Intuition: with slot-bounded capacity, a large "
+                "hot frame is worth MORE than a small equally-hot one — "
+                "every miss on it costs a longer database load.")
+
+
 class Doorkeeper(AdmissionPolicy):
     """Second-chance admission: one-shot keys never evict a resident; a key
     is admitted once it has been seen at least twice in the aging window."""
 
     name = "doorkeeper"
 
-    def admit(self, key, victim, sketch, entries):
+    def admit(self, key, victim, sketch, entries, size_bytes=None):
         if sketch is None:
             return True
         return sketch.estimate(key) >= 2
@@ -219,18 +390,19 @@ class LLMAdmission(AdmissionPolicy):
     def agreement(self) -> float:
         return self.llm_correct / self.llm_total if self.llm_total else 1.0
 
-    def admit(self, key, victim, sketch, entries):
+    def admit(self, key, victim, sketch, entries, size_bytes=None):
         from repro.core.prompts import admission_decision_prompt, \
             parse_json_tail
-        kf = sketch.estimate(key) if sketch is not None else 0
-        vf = sketch.estimate(victim) if sketch is not None else 0
+        kf, vf = (sketch.estimate_many((key, victim))
+                  if sketch is not None else (0, 0))
         prompt = admission_decision_prompt(
             self.base.describe(), key, victim, kf, vf,
             entries_json(entries), self.few_shot)
         completion = self.llm.complete(prompt)
         self.prompt_tokens += len(prompt) // 4
         self.completion_tokens += len(completion) // 4
-        expected = self.base.admit(key, victim, sketch, entries)
+        expected = self.base.admit(key, victim, sketch, entries,
+                                   size_bytes=size_bytes)
         try:
             raw = parse_json_tail(completion)
             decision = raw.get("decision") if isinstance(raw, dict) else None
@@ -245,7 +417,7 @@ class LLMAdmission(AdmissionPolicy):
 
 
 ADMISSIONS = {"always": AdmitAll, "tinylfu": TinyLFU,
-              "doorkeeper": Doorkeeper}
+              "tinylfu-cost": TinyLFUCost, "doorkeeper": Doorkeeper}
 
 
 def make_admission(name: str, *, impl: str = "python", llm=None,

@@ -34,6 +34,7 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     puts: int = 0
+    drops: int = 0   # explicit removals (replica demotion) — not evictions
     # admission accounting (zero unless an AdmissionPolicy is wired in the
     # controller): full-cache decisions to install vs bypass. A bypassed
     # load streams to the caller without evicting any resident.
@@ -133,6 +134,15 @@ class DataCache:
             insert_order=prev.insert_order if prev else self._insert_counter)
         self.stats.puts += 1
         return evicted
+
+    def drop(self, key: str) -> bool:
+        """Explicitly remove ``key`` (replica demotion — distinct from a
+        capacity eviction in the stats). Returns whether it was present."""
+        if key not in self._entries:
+            return False
+        del self._entries[key]
+        self.stats.drops += 1
+        return True
 
     def apply_state(self, keys: List[str], loader: Callable[[str], Any],
                     size_of: Callable[[Any], int]):

@@ -37,14 +37,16 @@ def _admission_tokens(admission, since=(0, 0)):
 def admit_loads(cache: DataCache, policy: Policy,
                 admission: Optional[AdmissionPolicy],
                 sketch: Optional[FrequencySketch],
-                loads: Sequence[str]) -> List[str]:
+                loads: Sequence[str],
+                sizer: Optional[Callable[[str], int]] = None) -> List[str]:
     """Admission pre-filter for the LLM update path: drop this round's
     loads that must *bypass* (no eviction; the caller already holds the
     loaded value) before the update prompt is built, counting them in
     ``cache.stats.bypassed``. Victims are estimated against the pre-round
     cache snapshot — the same snapshot the LLM sees in its prompt. With no
     admission policy this reduces to the pre-admission new-loads filter,
-    so default behavior is bit-identical to pre-admission code."""
+    so default behavior is bit-identical to pre-admission code. ``sizer``
+    (optional) supplies the candidate's byte size for cost-aware policies."""
     if admission is None:
         return [k for k in loads if k not in cache]
     kept: List[str] = []
@@ -55,7 +57,8 @@ def admit_loads(cache: DataCache, policy: Policy,
             continue
         if occupancy + len(kept) >= cache.capacity:
             victim = policy.victim(cache.entries())
-            if not admission.admit(k, victim, sketch, cache.entries()):
+            if not admission.admit(k, victim, sketch, cache.entries(),
+                                   size_bytes=sizer(k) if sizer else None):
                 stats.bypassed += 1
                 continue
             # admitted/bypassed count only consulted (full-cache)
@@ -122,16 +125,23 @@ class ProgrammaticController:
             if k in self.cache:
                 continue
             victim = None
+            v = None
             if len(self.cache) >= self.cache.capacity:
                 victim = self.policy.victim(self.cache.entries())
                 if self.admission is not None:
+                    # loader is a latency-free peek; reading the value up
+                    # front (for its byte size, which cost-aware admission
+                    # weighs) does not change any clock or RNG stream
+                    v = loader(k)
                     if not self.admission.admit(k, victim, self.sketch,
-                                                self.cache.entries()):
+                                                self.cache.entries(),
+                                                size_bytes=size_of(v)):
                         self.cache.stats.bypassed += 1
                         bypassed += 1
                         continue
                     self.cache.stats.admitted += 1
-            v = loader(k)
+            if v is None:
+                v = loader(k)
             self.cache.put(k, v, size_of(v), victim=victim)
         pt, ct = _admission_tokens(self.admission, since=tok0)
         return {"prompt_tokens": pt, "completion_tokens": ct,
@@ -204,7 +214,8 @@ class LLMController:
         before = self.cache.stats.bypassed
         tok0 = _admission_tokens(self.admission)
         new_loads = admit_loads(self.cache, self.policy, self.admission,
-                                self.sketch, loads)
+                                self.sketch, loads,
+                                sizer=lambda k: size_of(loader(k)))
         bypassed = self.cache.stats.bypassed - before
         adm_pt, adm_ct = _admission_tokens(self.admission, since=tok0)
         if not new_loads:

@@ -57,6 +57,14 @@ class RoutingStats:
     admitted: int = 0
     bypassed: int = 0
     bypass_reads: int = 0
+    # hot-key replication accounting (all zero without a HotKeyReplicator):
+    # ``replica_installs``/``replica_drops`` count per-pod copy churn;
+    # ``replica_hits`` counts local hits served by a NON-owner pod's copy —
+    # they are a subset of ``local_hits`` (a replica hit is a local hit
+    # that would otherwise have been a remote load or join)
+    replica_installs: int = 0
+    replica_drops: int = 0
+    replica_hits: int = 0
 
 
 @dataclasses.dataclass
@@ -98,6 +106,34 @@ class PodLocalCacheRouter:
         self.alive: Dict[str, bool] = {p: True for p in pod_ids}
         self.stats = RoutingStats()
         self.in_flight: Dict[str, InFlightLoad] = {}
+        # owner() memo: rendezvous hashing is deterministic in (key, live
+        # pod set), so the winner is cached per key and the whole memo is
+        # invalidated whenever membership changes (fail/restore). At 256
+        # sessions the blake2-per-(key,pod) max() walk dominated routing.
+        self._owner_memo: Dict[str, str] = {}
+        # hot-key replicas: key -> pods (never the owner) a HotKeyReplicator
+        # has pushed a copy to. The list is *advisory* — a replica can be
+        # evicted later by that pod's own install traffic, so lookups verify
+        # membership (see ``locate``). Empty without a replicator, in which
+        # case every replica-aware path reduces exactly to the owner-only
+        # behavior (digest-locked).
+        self.replicas: Dict[str, List[str]] = {}
+        # per-key demand-load counter since the last replication epoch: the
+        # replicator's promotion feed (a key that keeps paying physical DB
+        # loads is hot AND homeless — exactly what a replica fixes). Only
+        # maintained while a replicator is wired (``spill`` is set); the
+        # replicator drains it each epoch.
+        self.demand_counts: Dict[str, int] = {}
+        # per-key reads served by a replica since the last epoch: the
+        # replicator's *demotion* feed (a replica that serves no reads for
+        # a full epoch is not earning its slot). Drained each epoch.
+        self.replica_reads: Dict[str, int] = {}
+        # spill hook: a HotKeyReplicator registers itself here; a full
+        # owner pod that BYPASSES a candidate offers it for spill
+        # replication at that instant (admission knows the key is warm but
+        # cannot place it locally — another pod may hold someone globally
+        # colder). None without replication.
+        self.spill = None
 
     # -- membership ----------------------------------------------------------
     def fail_pod(self, pod_id: str):
@@ -109,19 +145,44 @@ class PodLocalCacheRouter:
         self.pods[pod_id] = DataCache(self.pods[pod_id].capacity, self._clock)
         self.policies[pod_id] = make_policy(self._policy_name)
         self.stats.failovers += 1
+        self._owner_memo.clear()
+        for pods in self.replicas.values():       # copies died with the pod
+            if pod_id in pods:
+                pods.remove(pod_id)
 
     def restore_pod(self, pod_id: str):
         self.alive[pod_id] = True
+        self._owner_memo.clear()
 
     def live_pods(self) -> List[str]:
         return [p for p, ok in self.alive.items() if ok]
 
     # -- routing -------------------------------------------------------------
     def owner(self, key: str) -> str:
-        live = self.live_pods()
-        if not live:
-            raise RuntimeError("no live pods")
-        return max(live, key=lambda p: _score(key, p))
+        pod = self._owner_memo.get(key)
+        if pod is None:
+            live = self.live_pods()
+            if not live:
+                raise RuntimeError("no live pods")
+            pod = max(live, key=lambda p: _score(key, p))
+            self._owner_memo[key] = pod
+        return pod
+
+    def locate(self, key: str) -> Optional[str]:
+        """The pod whose cache currently holds ``key``: the owner when it
+        does (the common case and the only case without replication), else
+        the first live replica pod that still holds a copy (deterministic:
+        replica-list insertion order), else ``None``. Replica lists are
+        advisory — membership is verified against the actual pod cache."""
+        pod = self.owner(key)
+        if key in self.pods[pod]:
+            return pod
+        pods = self.replicas.get(key)
+        if pods:
+            for p in pods:
+                if self.alive.get(p, False) and key in self.pods[p]:
+                    return p
+        return None
 
     def note_access(self, key: str, now: Optional[float] = None) -> None:
         """Record one logical access in the shared frequency sketch (no-op
@@ -149,12 +210,91 @@ class PodLocalCacheRouter:
             victim = self.policies[pod].victim(cache.entries())
             if self.admission is not None:
                 if not self.admission.admit(key, victim, self.sketch,
-                                            cache.entries()):
+                                            cache.entries(),
+                                            size_bytes=size_bytes):
                     self.stats.bypassed += 1
+                    if self.spill is not None:
+                        # hot-but-homeless: offer the rejected key for
+                        # spill replication onto another pod's capacity
+                        self.spill(key, value, size_bytes)
                     return False
                 self.stats.admitted += 1
         cache.put(key, value, size_bytes, victim=victim)
         return True
+
+    # -- hot-key replication --------------------------------------------------
+    def replicate(self, key: str, value: object, size_bytes: int,
+                  fanout: Optional[int] = None,
+                  gain_ratio: float = 1.0) -> int:
+        """Push copies of ``key`` to live non-owner pods (the
+        HotKeyReplicator's promote action). Capacity is charged on each
+        receiving pod: a full pod evicts its update policy's victim to make
+        room — unless the shared sketch says the victim is at least as hot
+        as ``key`` (replication must not churn out someone hotter).
+
+        ``fanout=None`` pushes to *every* eligible pod; a bounded fanout
+        takes the cheapest hosts first — pods with free capacity, then pods
+        whose would-be victim is coldest (deterministic: ties break by pod
+        id). One copy already converts the key's whole miss stream into
+        pod-local hits (reads resolve owner-first, replicas second at equal
+        cost), so bounded fanout buys the same hits for fewer evictions.
+
+        The replica's victim is the host pod's MINIMUM-FREQUENCY resident
+        (per the shared sketch), not the pod's update-policy victim: the
+        update policy optimises the pod's own demand stream (recency), but
+        a replica install is a *placement arbitrage* — it only pays off
+        when the displaced stream is the globally coldest one available.
+        Skips pods already holding a copy; skips pods whose coldest
+        resident is at least as hot as ``key``. Returns the number of new
+        copies."""
+        owner = self.owner(key)
+        kf = self.sketch.estimate(key) if self.sketch is not None else None
+        candidates = []
+        for p in self.live_pods():
+            if p == owner:
+                continue
+            cache = self.pods[p]
+            if key in cache:
+                continue
+            victim = None
+            vf = -1                      # free slot: cheapest possible host
+            if len(cache) >= cache.capacity:
+                entries = cache.entries()
+                if self.sketch is not None:
+                    ests = self.sketch.estimate_many(sorted(entries))
+                    vf, victim = min(zip(ests, sorted(entries)))
+                    # the swap only pays when the key's stream decisively
+                    # beats the displaced one: require a gain_ratio margin
+                    # over the coldest resident (>= 1.0; higher = pickier)
+                    if kf is not None and kf < gain_ratio * max(vf, 1):
+                        continue
+                else:
+                    victim = self.policies[p].victim(entries)
+                    vf = 0
+            candidates.append((vf, p, victim))
+        candidates.sort()
+        if fanout is not None:
+            candidates = candidates[:fanout]
+        installed = 0
+        for _, p, victim in candidates:
+            self.pods[p].put(key, value, size_bytes, victim=victim)
+            pods = self.replicas.setdefault(key, [])
+            if p not in pods:
+                pods.append(p)
+            installed += 1
+            self.stats.replica_installs += 1
+        return installed
+
+    def drop_replica(self, key: str) -> int:
+        """Remove every tracked replica of ``key`` (the demote action). The
+        owner pod's copy — if any — is untouched: ownership placement stays
+        the admission/eviction layer's business. Returns copies removed."""
+        dropped = 0
+        for p in self.replicas.pop(key, []):
+            if self.alive.get(p, False) and self.pods[p].drop(key):
+                dropped += 1
+                self.stats.replica_drops += 1
+        return dropped
 
     # -- async completion -----------------------------------------------------
     def start_load(self, key: str, value: object, size_bytes: int, *,
@@ -174,6 +314,8 @@ class PodLocalCacheRouter:
         self.in_flight[key] = rec
         if prefetched:
             self.stats.prefetch_issued += 1
+        elif self.spill is not None:     # replication wired: feed promotion
+            self.demand_counts[key] = self.demand_counts.get(key, 0) + 1
         return rec
 
     def finish_load(self, key: str) -> InFlightLoad:

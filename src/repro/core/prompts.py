@@ -116,6 +116,55 @@ def admission_decision_prompt(policy_text: str, key: str, victim: str,
     return "".join(parts)
 
 
+REPLICATION_FEWSHOT = """Example 1:
+Replication policy: threshold (replicate when frequency >= 8; drop a replica when frequency < 4).
+Key: xview1-2022 (estimated frequency: 11; currently replicated: no)
+Thought: the key is clearly above the promote threshold, so pushing copies to every pod converts its remote joins into local hits.
+Answer: {"decision": "replicate"}
+
+Example 2:
+Replication policy: threshold (replicate when frequency >= 8; drop a replica when frequency < 4).
+Key: modis-2016 (estimated frequency: 6; currently replicated: yes)
+Thought: the key cooled below the promote threshold but is still above the demote threshold — inside the hysteresis band, keep the replicas (no flapping).
+Answer: {"decision": "hold"}
+
+Example 3:
+Replication policy: threshold (replicate when frequency >= 8; drop a replica when frequency < 4).
+Key: naip-2018 (estimated frequency: 2; currently replicated: yes)
+Thought: the key fell below the demote threshold; its replicas now waste capacity other keys could use.
+Answer: {"decision": "drop"}
+"""
+
+
+def replication_decision_prompt(policy_text: str, key: str, freq: int,
+                                replicated: bool, promote_min: int,
+                                demote_min: int, top_json: str,
+                                few_shot: bool) -> str:
+    """Prompt for the GPT-driven hot-key replication decision: given the
+    replication policy in natural language, the key's sketch estimate, and
+    whether it is currently replicated, decide REPLICATE (push a copy to
+    every pod), DROP (remove its replicas) or HOLD (change nothing)."""
+    parts = [SYSTEM_HEADER,
+             "You are now the cache REPLICATION controller of a pod-sharded "
+             "deployment. Each key's data is cached on exactly one owner "
+             "pod; SUPER-HOT keys can additionally be replicated to every "
+             "pod, converting other pods' remote joins into local hits at "
+             "the cost of cache capacity on each pod. Apply the replication "
+             "policy below to ONE key.\n",
+             f"Replication policy: {policy_text}\n"]
+    if few_shot:
+        parts.append(REPLICATION_FEWSHOT)
+    parts.append(f"Hottest keys right now (frequency sketch): {top_json}\n")
+    parts.append(f"Key: {key} (estimated frequency: {freq}; currently "
+                 f"replicated: {'yes' if replicated else 'no'})\n")
+    parts.append(f"Thresholds: replicate at >= {promote_min}; drop a "
+                 f"replica at < {demote_min}; otherwise hold.\n")
+    parts.append('Respond with a JSON object: {"decision": "replicate"}, '
+                 '{"decision": "drop"} or {"decision": "hold"}.\n')
+    parts.append("Answer (JSON): ")
+    return "".join(parts)
+
+
 def parse_json_tail(text: str):
     """Parse the trailing JSON object/list from an LLM completion."""
     text = text.strip()

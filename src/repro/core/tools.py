@@ -8,7 +8,6 @@ miss is just a failed tool call it re-plans around.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 
@@ -120,6 +119,47 @@ def make_admission_tool(admission, sketch, entries_of, victim_of,
         fn=cache_admit)
 
 
+def make_replication_tool(replicator) -> ToolSpec:
+    """Hot-key replication as a callable cache op: ``cache_replicate(key)``
+    answers whether the replication policy would REPLICATE the key to every
+    pod, DROP its existing replicas, or HOLD the current placement — with
+    the evidence (sketch estimate, thresholds, current replica state) the
+    decision is based on.
+
+    Exposed in the same function-calling schema as ``read_cache`` /
+    ``load_db`` / ``cache_admit`` so the agent — or the GPT-driven
+    controller — can query the placement verdict like any other tool (the
+    paper's cache-ops-as-tools design extended to placement). Querying is
+    side-effect-free: actual promotion/demotion happens on the
+    replicator's epoch, and the sketch is read without interning (a
+    queried-but-never-accessed key must not join the top-k candidate
+    population). The verdict is always the programmatic base rule — a
+    diagnostic probe must not consume LLM tokens or grading samples."""
+
+    def cache_replicate(key: str):
+        pol = replicator.policy
+        base = getattr(pol, "base", pol)     # LLM wrapper: probe the rule
+        freq = replicator.sketch.estimate_peek(key)
+        replicated = key in replicator.replicated
+        decision = base.decide(key, freq, replicated)
+        return {"key": key, "decision": decision, "key_freq": freq,
+                "replicated": replicated,
+                "promote_min": pol.promote_min,
+                "demote_min": pol.demote_min,
+                "reason": pol.name}
+
+    return ToolSpec(
+        name="cache_replicate",
+        description=("Ask the hot-key REPLICATION policy whether "
+                     "`dataset-year` should be replicated to every pod "
+                     "(converting remote joins into local hits at the cost "
+                     "of cache capacity), have its replicas dropped, or "
+                     "keep its current placement."),
+        parameters={"key": {"type": "string",
+                            "description": "dataset-year, e.g. xview1-2022"}},
+        fn=cache_replicate)
+
+
 class ToolRegistry:
     """Function-calling registry: schemas for the prompt, dispatch at runtime."""
 
@@ -146,18 +186,20 @@ class ToolRegistry:
         return self._tools[name]
 
     def call(self, name: str, clock=None, **kwargs) -> ToolResult:
-        if name not in self._tools:
+        # dispatch is the engine's innermost loop (every tool call of every
+        # session goes through here): one dict lookup, no wall-clock timing
+        # — latency accounting is *modeled* (SimClock), and ToolResult's
+        # latency_s field reports the modeled charge
+        spec = self._tools.get(name)
+        if spec is None:
             return ToolResult(name=name, ok=False,
                               error=f"unknown tool {name!r}; available: "
                                     f"{self.names()}")
-        spec = self._tools[name]
-        t0 = time.perf_counter()
         if clock is not None and spec.latency_s:
             clock.advance(spec.latency_s)
         try:
-            value = spec.fn(**kwargs)
-            return ToolResult(name=name, ok=True, value=value,
-                              latency_s=time.perf_counter() - t0)
+            return ToolResult(name=name, ok=True, value=spec.fn(**kwargs),
+                              latency_s=spec.latency_s)
         except (ToolError, KeyError, ValueError) as e:
             return ToolResult(name=name, ok=False, error=str(e),
-                              latency_s=time.perf_counter() - t0)
+                              latency_s=spec.latency_s)

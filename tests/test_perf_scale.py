@@ -1,0 +1,446 @@
+"""Batched simulation core + hot-key replication (ISSUE 4).
+
+Covers: the deferred-touch sketch's exact equivalence to touch-immediately
+conservative update (property tests over random interleavings and aging
+boundaries), ``top_k``/``estimate_many`` views, the tuple-backed EventQueue
+order parity, replication invariants (capacity never exceeded, owner copy
+untouched by demotion, no flapping inside the hysteresis band), the
+admission-bypass spill feed, cost-aware (slot-value) admission semantics,
+the adaptive prefetch depth guard's acceptance cells, and the digest locks
+proving every PR-3 table is bit-identical with the new features off.
+"""
+import hashlib
+import random
+
+from benchmarks import tables
+from repro.agent.backends import Profile, SimLLM
+from repro.agent.concurrency import run_episode
+from repro.agent.geollm.simclock import EventQueue
+from repro.core.admission import FrequencySketch, TinyLFU, TinyLFUCost
+from repro.core.cache import CacheEntry
+from repro.core.distributed_cache import PodLocalCacheRouter
+from repro.core.replication import (
+    HotKeyReplicator,
+    LLMReplication,
+    ThresholdReplication,
+    make_replication,
+)
+
+
+def _digest(rows) -> str:
+    return hashlib.sha256(repr(rows).encode()).hexdigest()[:16]
+
+
+def _entries(keys, sizes=None):
+    return {k: CacheEntry(key=k, value=None,
+                          size_bytes=(sizes or {}).get(k, 0),
+                          created_at=0.0, last_access=float(i),
+                          access_count=1, insert_order=i)
+            for i, k in enumerate(keys)}
+
+
+# ---------------------------------------------------------------------------
+# Deferred-touch sketch: exact equivalence to touch-immediately
+# ---------------------------------------------------------------------------
+
+def test_touch_many_flush_matches_per_key_touch_exactly():
+    """Property: a batched sketch (touches buffered, flushed once at the
+    end) reports exactly the estimates of a sketch whose buffer is flushed
+    after EVERY touch — over a random interleaving where collisions are
+    plentiful (tiny width)."""
+    rng = random.Random(42)
+    keys = [f"k{i}-2020" for i in range(25)]
+    stream = [rng.choice(keys) for _ in range(600)]
+    eager = FrequencySketch(width=32, depth=4, age_period_s=0)
+    lazy = FrequencySketch(width=32, depth=4, age_period_s=0)
+    for k in stream:
+        eager.touch(k)
+        eager.flush()                  # touch-immediately semantics
+    lazy.touch_many(stream)            # one deferred batch
+    for k in keys:
+        assert lazy.estimate(k) == eager.estimate(k), k
+    assert (lazy.table == eager.table).all()
+
+
+def test_deferred_touches_flush_in_arrival_order_at_reads():
+    """Estimates read mid-stream see every prior touch (the flush boundary
+    is any estimate call), so admission decisions cannot observe a stale
+    sketch."""
+    s = FrequencySketch(width=64, depth=4)
+    for _ in range(5):
+        s.touch("a-2020")
+    assert s.estimate("a-2020") == 5   # buffer flushed by the read
+    s.touch("a-2020")
+    s.touch("b-2020")
+    assert s.estimate_many(("a-2020", "b-2020")) == [6, 1]
+
+
+def test_batched_aging_matches_eager_aging():
+    """Aging boundaries interleave correctly with buffered touches: each
+    touch carries its sim time, and crossing a boundary flushes what came
+    before the halving."""
+    eager = FrequencySketch(width=64, depth=4, age_period_s=10.0)
+    lazy = FrequencySketch(width=64, depth=4, age_period_s=10.0)
+    plan = [("a-2020", 1.0)] * 6 + [("b-2020", 4.0)] * 3 + \
+           [("a-2020", 11.0)] * 2 + [("b-2020", 25.0)]
+    for k, t in plan:
+        eager.touch(k, now=t)
+        eager.flush()
+        lazy.touch(k, now=t)
+    assert lazy.ages == eager.ages == 2
+    for k in ("a-2020", "b-2020"):
+        assert lazy.estimate(k) == eager.estimate(k)
+
+
+def test_top_k_matches_bruteforce_and_is_deterministic():
+    s = FrequencySketch(width=256, depth=4)
+    rng = random.Random(3)
+    keys = [f"k{i}-2021" for i in range(20)]
+    for k in keys:
+        s.touch_many([k] * rng.randint(0, 9))
+    brute = sorted(((k, s.estimate(k)) for k in keys),
+                   key=lambda kv: (-kv[1], kv[0]))
+    assert s.top_k(5) == brute[:5]
+    assert s.top_k(100) == brute        # k larger than population
+
+
+def test_sketch_flush_counter_and_buffer_cap():
+    from repro.core.admission import FLUSH_BUFFER_MAX
+    s = FrequencySketch(width=64, depth=2, age_period_s=0)
+    s.touch_many(["x-2020"] * (FLUSH_BUFFER_MAX + 10))
+    assert s.flushes >= 1              # cap forced a flush mid-stream
+    assert s.estimate("x-2020") == FLUSH_BUFFER_MAX + 10
+
+
+# ---------------------------------------------------------------------------
+# Tuple-backed EventQueue
+# ---------------------------------------------------------------------------
+
+def test_event_queue_fast_paths_agree_with_pop():
+    def fill(q):
+        q.push(2.0, 1, 3, "a")
+        q.push(1.0, 0, 9, "b")
+        q.push(1.0, 1, 0, "c")
+        q.push(2.0, 0, 0, "d")
+    q1, q2, q3 = EventQueue(), EventQueue(), EventQueue()
+    fill(q1), fill(q2), fill(q3)
+    order = [q1.pop().payload for _ in range(len(q1))]
+    assert [q2.pop_payload() for _ in range(len(q2))] == order
+    timed = [q3.pop_timed() for _ in range(len(q3))]
+    assert [p for _, p in timed] == order
+    assert [t for t, _ in timed] == [1.0, 1.0, 2.0, 2.0]
+
+
+# ---------------------------------------------------------------------------
+# Replication: router invariants
+# ---------------------------------------------------------------------------
+
+def _router_with_sketch(n_pods=3, capacity=2):
+    sketch = FrequencySketch(width=256)
+    r = PodLocalCacheRouter([f"p{i}" for i in range(n_pods)],
+                            capacity_per_pod=capacity, sketch=sketch)
+    return r, sketch
+
+
+def test_replicate_charges_capacity_and_never_exceeds_it():
+    r, sketch = _router_with_sketch(n_pods=3, capacity=2)
+    # fill every pod to capacity with its own keys
+    filled = []
+    for key in (f"fill{i}-2020" for i in range(24)):
+        pod = r.owner(key)
+        if len(r.pods[pod]) < 2:
+            r.install(pod, key, "V", 1)
+            filled.append(key)
+        if all(len(c) >= 2 for c in r.pods.values()):
+            break
+    sketch.touch_many(["hot-2020"] * 10)
+    copies = r.replicate("hot-2020", "HOT", 1)
+    assert copies >= 1
+    for pod, cache in r.pods.items():
+        assert len(cache) <= cache.capacity
+    # the copy is findable and is NOT on the owner
+    where = r.locate("hot-2020")
+    assert where is not None and where != r.owner("hot-2020")
+
+
+def test_replicate_skips_pods_with_hotter_residents():
+    r, sketch = _router_with_sketch(n_pods=2, capacity=1)
+    owner = r.owner("cand-2020")
+    other = next(p for p in r.pods if p != owner)
+    resident = next(k for k in (f"x{i}-2020" for i in range(50))
+                    if r.owner(k) == other)
+    r.install(other, resident, "R", 1)
+    sketch.touch_many([resident] * 9 + ["cand-2020"] * 3)
+    assert r.replicate("cand-2020", "C", 1) == 0      # resident hotter
+    sketch.touch_many(["cand-2020"] * 20)
+    assert r.replicate("cand-2020", "C", 1) == 1      # now decisively hotter
+
+
+def test_drop_replica_leaves_owner_copy():
+    r, sketch = _router_with_sketch(n_pods=2, capacity=2)
+    key = "k-2020"
+    owner = r.owner(key)
+    r.install(owner, key, "V", 1)
+    sketch.touch_many([key] * 8)
+    r.replicate(key, "V", 1)
+    assert len(r.replicas.get(key, [])) == 1
+    dropped = r.drop_replica(key)
+    assert dropped == 1
+    assert key in r.pods[owner]              # owner copy untouched
+    assert r.locate(key) == owner
+    assert r.stats.replica_drops == 1
+
+
+def test_locate_prefers_owner_and_verifies_membership():
+    r, sketch = _router_with_sketch(n_pods=2, capacity=2)
+    key = "q-2020"
+    assert r.locate(key) is None
+    sketch.touch_many([key] * 8)
+    r.replicate(key, "V", 1)
+    rep_pod = r.locate(key)
+    assert rep_pod is not None and rep_pod != r.owner(key)
+    # stale advisory entry: evict the replica behind the router's back
+    r.pods[rep_pod].drop(key)
+    assert r.locate(key) is None
+
+
+# ---------------------------------------------------------------------------
+# Replication: hysteresis (no flapping) + usage veto + spill feed
+# ---------------------------------------------------------------------------
+
+def _replicator(r, sketch, **kw):
+    kw.setdefault("policy", ThresholdReplication(promote_min=8,
+                                                 demote_frac=0.5))
+    kw.setdefault("epoch_s", 10.0)
+    kw.setdefault("miss_min", 1)
+    return HotKeyReplicator(r, sketch, lambda k: "VAL", **kw)
+
+
+def test_no_flapping_inside_hysteresis_band():
+    """A replicated key whose estimate sits inside [demote_min,
+    promote_min) and whose replica is being USED holds its replicas across
+    epochs — it is neither dropped nor re-promoted (no flap)."""
+    r, sketch = _router_with_sketch(n_pods=2, capacity=2)
+    rep = _replicator(r, sketch)
+    key = "band-2020"
+    sketch.touch_many([key] * 8)
+    r.demand_counts[key] = 3
+    rep.run_epoch(10.0)
+    assert key in rep.replicated and rep.stats.promotes == 1
+    sketch.age()                       # halve: estimate 8 -> 4 (in band)
+    assert rep.policy.demote_min <= sketch.estimate(key) \
+        < rep.policy.promote_min
+    for epoch in range(2, 5):
+        r.replica_reads[key] = 1       # the replica is earning its slot
+        rep.run_epoch(epoch * 10.0)
+        assert key in rep.replicated, "dropped inside the hysteresis band"
+    assert rep.stats.promotes == 1     # never re-promoted either
+
+
+def test_unused_replica_dropped_after_grace():
+    r, sketch = _router_with_sketch(n_pods=2, capacity=2)
+    rep = _replicator(r, sketch)
+    key = "idle-2020"
+    sketch.touch_many([key] * 10)
+    r.demand_counts[key] = 2
+    rep.run_epoch(10.0)
+    assert key in rep.replicated
+    rep.run_epoch(20.0)                # grace epoch: still held
+    assert key in rep.replicated
+    rep.run_epoch(30.0)                # no reads for a full epoch: veto
+    assert key not in rep.replicated
+    assert rep.stats.demotes == 1
+
+
+def test_demote_below_band_drops_replicas():
+    r, sketch = _router_with_sketch(n_pods=2, capacity=2)
+    rep = _replicator(r, sketch)
+    key = "cool-2020"
+    sketch.touch_many([key] * 8)
+    r.demand_counts[key] = 2
+    rep.run_epoch(10.0)
+    assert key in rep.replicated
+    sketch.age()
+    sketch.age()                       # 8 -> 2 < demote_min 4
+    r.replica_reads[key] = 5           # even a used replica goes below band
+    rep.run_epoch(20.0)
+    assert key not in rep.replicated
+    assert r.locate(key) is None or r.locate(key) == r.owner(key)
+
+
+def test_admission_bypass_feeds_spill_promotion():
+    """router.install() offering bypassed keys to the replicator: the
+    spill path promotes a hot-but-homeless key the moment admission
+    rejects it at its full owner pod."""
+    sketch = FrequencySketch(width=256)
+    r = PodLocalCacheRouter(["p0", "p1"], capacity_per_pod=1,
+                            admission=TinyLFU(), sketch=sketch)
+    rep = _replicator(r, sketch)
+    r.spill = rep.offer
+    cand = "spill-2020"
+    owner = r.owner(cand)
+    resident = next(k for k in (f"r{i}-2020" for i in range(50))
+                    if r.owner(k) == owner)
+    r.install(owner, resident, "R", 1)
+    sketch.touch_many([resident] * 20)         # resident wins at the owner
+    sketch.touch_many([cand] * 10)             # candidate hot, but colder
+    r.demand_counts[cand] = 3
+    assert not r.install(owner, cand, "C", 1)  # bypassed at the owner ...
+    assert cand in rep.replicated              # ... and spilled
+    assert r.locate(cand) is not None
+
+
+def test_llm_replication_graded_and_deterministic():
+    llm = SimLLM(Profile("gpt-4-turbo", "cot", True), seed=5)
+    pol = make_replication(impl="llm", llm=llm, promote_min=8)
+    assert isinstance(pol, LLMReplication)
+    sketch = FrequencySketch(width=256)
+    sketch.touch_many(["h-2020"] * 12)
+    decisions = [pol.decide("h-2020", sketch.estimate("h-2020"), False)
+                 for _ in range(30)]
+    assert pol.llm_total == 30
+    assert decisions.count("replicate") >= 25   # eps-rate slips only
+    assert 0.8 <= pol.agreement <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Cost-aware (slot-value) admission
+# ---------------------------------------------------------------------------
+
+def test_cost_admission_prefers_expensive_equal_frequency():
+    """With slot-bounded capacity, equal frequencies resolve by miss
+    penalty: a larger candidate may evict a smaller equally-hot victim,
+    and a smaller candidate never evicts a larger equally-hot one."""
+    s = FrequencySketch(width=256)
+    s.touch_many(["big-2020"] * 4 + ["small-2020"] * 4)
+    ents = _entries(["small-2020"], sizes={"small-2020": 10_000_000})
+    p = TinyLFUCost()
+    assert p.admit("big-2020", "small-2020", s, ents,
+                   size_bytes=200_000_000)
+    ents_big = _entries(["big-2020"], sizes={"big-2020": 200_000_000})
+    assert not p.admit("small-2020", "big-2020", s, ents_big,
+                       size_bytes=10_000_000)
+
+
+def test_cost_admission_degrades_to_tinylfu_without_sizes():
+    s = FrequencySketch(width=256)
+    s.touch_many(["hot-2020"] * 5 + ["cold-2020"])
+    p = TinyLFUCost()
+    ents = _entries(["cold-2020"])
+    assert p.admit("hot-2020", "cold-2020", s, ents, size_bytes=None)
+    assert not p.admit("cold-2020", "hot-2020", s,
+                       _entries(["hot-2020"]), size_bytes=None)
+
+
+def test_cost_admission_engine_deterministic_on_wide_band():
+    a = run_episode(4, 6, n_pods=2, reuse_rate=0.3, seed=1,
+                    admission="tinylfu-cost",
+                    rows_range=(2_000, 40_000)).metrics.row()
+    b = run_episode(4, 6, n_pods=2, reuse_rate=0.3, seed=1,
+                    admission="tinylfu-cost",
+                    rows_range=(2_000, 40_000)).metrics.row()
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: replication + adaptive prefetch acceptance
+# ---------------------------------------------------------------------------
+
+ZIPFG = {"scenario": "zipf",
+         "scenario_kw": {"zipf_a": 1.1, "zipf_global": True}}
+REPL_KW = {"epoch_s": 20.0, "max_replicated": 10, "promote_min": 4,
+           "miss_min": 2, "gain_ratio": 2.0}
+
+
+def test_replication_deterministic_and_shifts_time_never_answers():
+    base = run_episode(6, 6, n_pods=2, reuse_rate=0.3, seed=2,
+                       admission="tinylfu", **ZIPFG)
+    rep1 = run_episode(6, 6, n_pods=2, reuse_rate=0.3, seed=2,
+                       admission="tinylfu", replication=True,
+                       replication_kw=REPL_KW, **ZIPFG)
+    rep2 = run_episode(6, 6, n_pods=2, reuse_rate=0.3, seed=2,
+                       admission="tinylfu", replication=True,
+                       replication_kw=REPL_KW, **ZIPFG)
+    assert rep1.metrics.row() == rep2.metrics.row()
+    for sb, sr in zip(base.sessions, rep1.sessions):
+        assert [t.answers for t in sb.traces] == \
+            [t.answers for t in sr.traces]
+
+
+def test_replication_acceptance_16_4_zipf_global():
+    """ISSUE-4 acceptance: at 16 sessions / 4 pods, TinyLFU+replication
+    holds local hits strictly above the TinyLFU baseline with p95 no
+    worse; replication alone beats install-everything decisively."""
+    base = run_episode(16, 25, n_pods=4, reuse_rate=0.3, seed=0,
+                       admission="tinylfu", **ZIPFG).metrics
+    rep = run_episode(16, 25, n_pods=4, reuse_rate=0.3, seed=0,
+                      admission="tinylfu", replication=True,
+                      replication_kw=REPL_KW, **ZIPFG).metrics
+    assert rep.local_hit_rate > base.local_hit_rate
+    assert rep.p95_task_latency_s <= base.p95_task_latency_s
+    assert rep.replica_hits > 0
+    none = run_episode(16, 25, n_pods=4, reuse_rate=0.3, seed=0,
+                       **ZIPFG).metrics
+    ronly = run_episode(16, 25, n_pods=4, reuse_rate=0.3, seed=0,
+                        replication=True, replication_kw=REPL_KW,
+                        **ZIPFG).metrics
+    assert ronly.local_hit_rate > none.local_hit_rate + 0.02
+    assert ronly.p95_task_latency_s < none.p95_task_latency_s
+
+
+def test_adaptive_prefetch_recovers_midrange_and_keeps_saturation():
+    """ISSUE-4 satellite: the adaptive depth guard recovers the 8/8
+    mid-range win (fixed guard 1.10 -> >= 1.18) without losing the 16/4
+    saturation result (stays >= the fixed guard's speedup)."""
+    lazy88 = run_episode(8, 25, n_pods=8, seed=0).metrics
+    ad88 = run_episode(8, 25, n_pods=8, seed=0, prefetch=True,
+                       prefetch_adaptive=True).metrics
+    assert lazy88.p95_task_latency_s / ad88.p95_task_latency_s >= 1.18
+    lazy164 = run_episode(16, 25, n_pods=4, seed=0).metrics
+    fx164 = run_episode(16, 25, n_pods=4, seed=0, prefetch=True).metrics
+    ad164 = run_episode(16, 25, n_pods=4, seed=0, prefetch=True,
+                        prefetch_adaptive=True).metrics
+    assert ad164.p95_task_latency_s <= fx164.p95_task_latency_s
+    assert ad164.p95_task_latency_s <= lazy164.p95_task_latency_s
+
+
+def test_replication_off_paths_reduce_to_owner_only():
+    """With replication off, locate() is the owner-membership check and
+    the replica-aware read path changes nothing (backstop for the digest
+    locks below)."""
+    res = run_episode(4, 6, n_pods=2, seed=3, admission="tinylfu")
+    assert res.router.replicas == {}
+    assert res.metrics.replica_hits == 0
+    assert res.metrics.replication_epochs == 0
+
+
+# ---------------------------------------------------------------------------
+# Digest locks: every PR-3 table is bit-identical with ISSUE-4 features off
+# ---------------------------------------------------------------------------
+
+PR3_CONCURRENCY_DIGEST = "ef9a35183ca207bd"
+PR3_PREFETCH_DIGEST = "4639ffe6b7da61d9"
+PR3_ADMISSION_DIGEST = "a176d18b8439bf57"
+PR3_BELADY_DIGEST = "0f372094aa0edaf3"
+
+
+def test_concurrency_table_bit_identical_without_scale_cells():
+    assert _digest(tables.table_concurrency(tasks_per_session=25,
+                                            scale=())) \
+        == PR3_CONCURRENCY_DIGEST
+
+
+def test_prefetch_table_bit_identical_without_adaptive_rows():
+    assert _digest(tables.table_prefetch(tasks_per_session=25,
+                                         adaptive=False)) \
+        == PR3_PREFETCH_DIGEST
+
+
+def test_admission_table_bit_identical_without_extras():
+    assert _digest(tables.table_admission(tasks_per_session=25,
+                                          extras=False)) \
+        == PR3_ADMISSION_DIGEST
+
+
+def test_belady_table_bit_identical():
+    assert _digest(tables.belady_bound(n=200)) == PR3_BELADY_DIGEST
