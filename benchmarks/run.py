@@ -103,6 +103,10 @@ def main() -> None:
                 "Hot-key replication (epoch + spill, zipf-global)",
                 tables.table_replication, tasks_per_session=conc_tasks,
                 parallel=par)
+        section("locality",
+                "Session->pod affinity (cross-pod read penalty sweep)",
+                tables.table_locality, tasks_per_session=conc_tasks,
+                parallel=par)
     section("belady", "Beyond-paper: Belady oracle bound",
             tables.belady_bound, n=n23)
 
@@ -147,8 +151,15 @@ def main() -> None:
         rep_rows = [r.split(",") for r in by_id.get("replication", [])
                     if r.startswith("replication,")]
         rep_cell = {c[4]: c for c in rep_rows if c[2] == "16"}
+        loc_rows = [r.split(",") for r in by_id.get("locality", [])
+                    if r.startswith("locality,")]
+        # headline cell: 16 sessions / 4 pods at each penalty, by config
+        loc_cell = {(float(c[4]), c[5]): c for c in loc_rows
+                    if c[2] == "16"}
+        loc_256 = {(float(c[4]), c[5]): c for c in loc_rows
+                   if c[2] == "256"}
         record = {
-            "schema": "bench_dcache/v3",
+            "schema": "bench_dcache/v4",
             "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "platform": {"python": platform.python_version(),
                          "machine": platform.machine()},
@@ -216,6 +227,25 @@ def main() -> None:
                                                          18),
                 "replication_llm_agreement_pct": _adm(rep_cell, "llm-repl",
                                                       15),
+                # session->pod affinity (ISSUE 5): the 16/4 penalty-2x
+                # acceptance cell — replication must beat
+                # install-everything by >1.07x p95, with the win carried
+                # by remote-read-share conversion
+                "locality_base_p95_2x_s": _adm(loc_cell, (2.0, "none"), 12),
+                "locality_repl_p95_speedup_2x": _adm(loc_cell,
+                                                     (2.0, "repl"), 17),
+                "locality_repl_p95_speedup_4x": _adm(loc_cell,
+                                                     (4.0, "repl"), 17),
+                "locality_base_remote_read_pct_2x": _adm(loc_cell,
+                                                         (2.0, "none"), 7),
+                "locality_repl_remote_read_pct_2x": _adm(loc_cell,
+                                                         (2.0, "repl"), 7),
+                "locality_repl_hit_delta_pp_2x": _adm(loc_cell,
+                                                      (2.0, "repl"), 18),
+                "locality_llm_agreement_pct": _adm(loc_cell,
+                                                   (2.0, "llm-repl"), 15),
+                "locality_256_repl_p95_speedup": _adm(loc_256,
+                                                      (2.0, "repl"), 17),
             },
         }
         if args.profile:

@@ -211,7 +211,11 @@ def table_prefetch(tasks_per_session: int = 25,
             "stalled_loads,pf_issued,pf_skipped,pf_hits,pf_wait_s,overlap_s,"
             "joined_loads,p95_speedup"]
     configs = [(ns, n_pods) for ns in sessions] + [tuple(c) for c in saturated]
-    modes = (("lazy", {}), ("prefetch", {"prefetch": True}))
+    # the fixed-guard mode pins prefetch_adaptive=False: since ISSUE 5 the
+    # engine defaults the adaptive guard ON, and these rows are the PR-3/4
+    # digest-locked fixed-guard reference
+    modes = (("lazy", {}),
+             ("prefetch", {"prefetch": True, "prefetch_adaptive": False}))
     if adaptive:
         modes += (("adaptive", {"prefetch": True,
                                 "prefetch_adaptive": True}),)
@@ -390,6 +394,92 @@ def table_replication(tasks_per_session: int = 25,
                 f"{m.replication_epochs},"
                 f"{100 * m.replication_agreement:.2f},"
                 f"{m.replication_tokens},{sp},{delta}")
+    return rows
+
+
+def table_locality(tasks_per_session: int = 25,
+                   parallel: bool = False) -> List[str]:
+    """Beyond-paper: session->pod affinity with a cross-pod read penalty
+    (ISSUE 5) — the consumer-side locality model that makes "localized"
+    caching real.
+
+    Workload: ``affinity_zipf`` (per-pod hot sets with 10% cross-pod
+    spillover, zipf 1.8 within each group): each home pod's sessions agree
+    on which keys are hot, but rendezvous hashing owns those keys on
+    arbitrary pods — without placement, ~79% of all reads are served
+    off-home and pay the penalty. Sessions are pinned by ``sticky``
+    affinity; the headline grid (16 sessions / 4 pods) runs a DOUBLE-length
+    task stream (placement is an equilibrium — the longer stream reads p95
+    off the converged regime) and sweeps the penalty 1x/2x/4x with
+    replication off/on; the scale rows (64/8, 256/16 at 10 tasks/session)
+    hold the penalty at 2x.
+
+    Row semantics: ``p95_speedup``/``hit_delta_pp`` compare each ``repl``
+    row against the ``none`` row of the same (sessions, pods, penalty)
+    cell. The acceptance cell is penalty 2x at 16/4: replication must beat
+    install-everything by >1.07x p95 (the PR-4 locality-free headline),
+    with the win now carried by the *local-read share* — remote reads drop
+    from ~79% to ~48% of all reads because promotion feeds on consumer
+    demand and placement targets the demanding home pod (locality-blind
+    PR-4 replication at penalty 1x leaves the share at ~77%). The p95 win
+    is NOT monotone in the penalty: hops slow consumers down, which
+    decongests the pod queues of the closed-loop fleet (benchmarks/README
+    documents the effect); the share conversion is monotone and is the
+    paper-faithful term. ``llm-repl`` routes every decision through the
+    locality-aware prompt path (home-pod demand rendered as evidence),
+    graded against the programmatic rule."""
+    rows = ["table,scenario,n_sessions,n_pods,penalty,config,local_hit_pct,"
+            "remote_read_pct,remote_reads,remote_hop_s,link_stall_s,p50_s,"
+            "p95_s,stall_total_s,replica_hits,agreement_pct,repl_tokens,"
+            "p95_speedup,hit_delta_pp"]
+    affz = {"scenario": "affinity_zipf",
+            "scenario_kw": {"zipf_a": 1.8, "spill_p": 0.1}}
+    # measured operating point (see repro/core/locality.py + tests):
+    # short epochs + a permissive gate — consumer-pod copies are cheap to
+    # re-place when install-everything churn evicts them
+    rkw = {"epoch_s": 10.0, "max_replicated": 12, "promote_min": 3,
+           "miss_min": 1, "gain_ratio": 1.2, "top_k": 12}
+    modes = [
+        ("none", {}, None),
+        ("repl", {"replication": True, "replication_kw": rkw}, "none"),
+    ]
+    llm_mode = ("llm-repl", {"replication": True, "replication_impl": "llm",
+                             "replication_kw": rkw}, "none")
+    head_tps = 2 * tasks_per_session
+    scale_tps = min(10, tasks_per_session)
+    # (n_sessions, n_pods, penalty, tasks/session, mode)
+    grid = [(16, 4, pen, head_tps, m)
+            for pen in (1.0, 2.0, 4.0) for m in modes]
+    grid.append((16, 4, 2.0, head_tps, llm_mode))
+    grid += [(ns, npod, 2.0, scale_tps, m)
+             for ns, npod in ((64, 8), (256, 16)) for m in modes]
+    cells = [lambda ns=ns, npod=npod, pen=pen, tps=tps, kw=m[1]: run_episode(
+                 ns, tps, n_pods=npod, reuse_rate=0.3, seed=0,
+                 affinity="sticky", remote_read_penalty=pen,
+                 **dict(affz, **kw))
+             for ns, npod, pen, tps, m in grid]
+    results = _run_cells(cells, parallel)
+    base_hit: Dict[tuple, float] = {}
+    base_p95: Dict[tuple, float] = {}
+    for (ns, npod, pen, _tps, (label, _, bline)), res in zip(grid, results):
+        m = res.metrics
+        key = (ns, npod, pen)
+        if bline is None:
+            base_hit[key] = m.local_hit_rate
+            base_p95[key] = m.p95_task_latency_s
+            sp = delta = ""
+        else:
+            sp = f"{base_p95[key] / m.p95_task_latency_s:.3f}"
+            delta = f"{100 * (m.local_hit_rate - base_hit[key]):.2f}"
+        rows.append(
+            f"locality,affz-1.8,{ns},{npod},{pen:g},{label},"
+            f"{100 * m.local_hit_rate:.2f},"
+            f"{100 * m.locality_remote_read_share:.2f},"
+            f"{m.locality_remote_reads},{m.locality_remote_hop_s:.3f},"
+            f"{m.locality_link_stall_s:.3f},{m.p50_task_latency_s:.3f},"
+            f"{m.p95_task_latency_s:.3f},{m.total_stall_s:.3f},"
+            f"{m.replica_hits},{100 * m.replication_agreement:.2f},"
+            f"{m.replication_tokens},{sp},{delta}")
     return rows
 
 

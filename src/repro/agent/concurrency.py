@@ -48,8 +48,19 @@ contend on the *shared* localized cache. This module models that regime:
   prompted eviction. Default (``None``) reproduces the install-everything
   engine bit-identically;
 * **workload scenarios** (``scenario=``): beyond the paper's working-set
-  sampler, zipfian skew, sequential scan, and shifting-hotspot phases
-  (see :class:`~repro.agent.geollm.workload.WorkloadSampler`).
+  sampler, zipfian skew, sequential scan, shifting-hotspot phases, and
+  per-pod hot sets with cross-pod spillover (``affinity_zipf``) — see
+  :class:`~repro.agent.geollm.workload.WorkloadSampler`;
+* **session->pod affinity + locality penalty** (``affinity="sticky"`` /
+  ``"round_robin"`` / ``"load_balanced"`` / ``"migrating"``, with
+  ``remote_read_penalty``): every session has a home pod and each value it
+  consumes from a *different* pod pays a cross-pod hop of
+  ``(penalty - 1) x cache_read`` (optionally FCFS-serialized on the home
+  pod's ingress link, ``link_queue=True``) — the paper's "localized"
+  caching made real on the consumer side. ``remote_read_penalty=1.0``
+  classifies reads as local/remote without moving a single clock: traces
+  are bit-identical to the affinity-free engine (the degeneracy contract
+  tests/test_locality.py locks down). See repro.core.locality.
 
 Single-session behavior: ``n_sessions=1`` (lazy) reproduces the same
 answer/token/time traces as the plain :class:`repro.agent.runtime.Runtime`
@@ -83,11 +94,17 @@ from repro.agent.geollm.geotools import make_geo_tools
 from repro.agent.geollm.simclock import EventQueue, LatencyModel, SimClock
 from repro.agent.geollm.workload import Task, WorkloadSampler, compute_gold
 from repro.core import profiling
-from repro.core.admission import FrequencySketch, make_admission
+from repro.core.admission import FrequencySketch, LLMAdmission, make_admission
 from repro.core.controller import ReadPlan
 from repro.core.distributed_cache import InFlightLoad, PodLocalCacheRouter
+from repro.core.locality import LocalityModel, make_affinity
 from repro.core.replication import HotKeyReplicator, make_replication
-from repro.core.tools import ToolRegistry, ToolSpec, make_replication_tool
+from repro.core.tools import (
+    ToolRegistry,
+    ToolSpec,
+    make_admission_tool,
+    make_replication_tool,
+)
 
 # event priorities: pod-load completions run before session resumes at the
 # same instant, so a session resuming exactly at a completion time observes
@@ -363,7 +380,9 @@ class SharedCacheController:
 def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
                             contention: PodContention, clock: SimClock,
                             session: "Session",
-                            events: EventQueue) -> List[ToolSpec]:
+                            events: EventQueue,
+                            locality: Optional[LocalityModel] = None,
+                            ) -> List[ToolSpec]:
     """Per-session ``read_cache`` / ``load_db`` bound to the shared router.
 
     ``read_cache`` hits the owning pod's local cache (fast,
@@ -389,8 +408,37 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
     ``remote_loads + prefetch_issued == contention.total_loads``.
     Every logical access also touches the shared frequency sketch
     (``router.note_access``), which is the admission policy's evidence.
+
+    With a :class:`~repro.core.locality.LocalityModel` wired (session->pod
+    affinity), every consumed value additionally pays the consumer-side
+    **cross-pod hop** when the serving pod is not the session's home pod:
+    the session clock advances by the hop (plus any wait on the home
+    pod's ingress link — hop completion is synchronous on the consumer,
+    so it needs no scheduler event), and the read is classified local vs
+    remote (the partition invariant: ``locality.local_reads +
+    locality.remote_reads == routed``). At ``remote_read_penalty == 1.0``
+    the hop is exactly zero and every trace is bit-identical to the
+    affinity-free engine (tests/test_locality.py).
     """
     stats = session.stats
+
+    def _consume(key: str, pod: str, size_mb: float) -> None:
+        # consumer-side locality charge, called exactly once per logical
+        # access (one per ``routed`` increment): classify the read, record
+        # consumer demand for the replicator, pay the cross-pod hop
+        if locality is None:
+            return
+        extra = locality.charge(key, pod, session.home_pod, size_mb,
+                                clock.now())
+        if pod != session.home_pod:
+            stats.remote_reads += 1
+            if extra > 0.0:
+                stats.remote_hop_s += extra
+                # the hop is synchronous on the consumer: its completion
+                # is this clock advance (no separate scheduler event — a
+                # per-read event would be pure heap churn on the hot loop
+                # the PR-4 work de-Pythonized, with no consumer)
+                clock.advance(extra)
 
     def _credit_once(rec: InFlightLoad, consume_t: float) -> None:
         # hidden service = dwell that ran while sessions did LLM/tool work;
@@ -405,7 +453,12 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
 
     def read_cache(key: str):
         owner_pod = router.owner(key)
-        if key in router.pods[owner_pod]:
+        if locality is not None:
+            # cheapest placement first: a copy on the session's home pod
+            # skips the cross-pod hop (identical to the owner-first order
+            # at penalty 1x — see PodLocalCacheRouter.locate)
+            pod = router.locate(key, home=session.home_pod) or owner_pod
+        elif key in router.pods[owner_pod]:
             pod = owner_pod
         else:
             # replica failover: a non-owner pod may still hold a pushed
@@ -420,6 +473,7 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
             router.replica_reads[key] = router.replica_reads.get(key, 0) + 1
         router.note_access(key, clock.now())
         clock.advance(clock.latency.cache_read(value.size_mb))
+        _consume(key, pod, value.size_mb)
         return value
 
     def load_db(key: str):
@@ -443,6 +497,7 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
                 stats.stall_s += wait
                 contention.join_stall(pod, wait)
             clock.advance(wait)
+            _consume(key, rec.pod, rec.value.size_mb)
             return rec.value
         own = session.prefetched.pop(key, None)
         if own is not None and key in router.pods[pod]:
@@ -454,6 +509,7 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
             contention.note_prefetch_consume(0.0)
             _credit_once(own, now)
             clock.advance(clock.latency.cache_read(value.size_mb))
+            _consume(key, pod, value.size_mb)
             return value
         if own is not None and own.bypassed:
             # 2b. own prefetch completed but admission rejected the install:
@@ -465,6 +521,7 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
             contention.note_prefetch_consume(0.0)
             _credit_once(own, now)
             clock.advance(clock.latency.cache_read(own.value.size_mb))
+            _consume(key, own.pod, own.value.size_mb)
             return own.value
         # 3. demand load (also covers an erroneous load_db decision for an
         # already-cached key, and a prefetched frame evicted before use —
@@ -483,6 +540,7 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
                           completes_at=now + dwell, prefetched=False)
         events.push(now + dwell, PRI_FINISH, payload=key)
         clock.advance(dwell)
+        _consume(key, pod, frame.size_mb)
         return frame
 
     return [
@@ -515,6 +573,11 @@ class SessionStats:
     prefetch_hits: int = 0
     prefetch_wait_s: float = 0.0
     prefetch_skipped: int = 0      # planned loads left lazy by the budget
+    # consumer-side locality split (zero without session->pod affinity):
+    # reads served from a pod other than this session's home, and the
+    # cross-pod hop seconds (incl. ingress-link waits) charged for them
+    remote_reads: int = 0
+    remote_hop_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -525,6 +588,7 @@ class Session:
     runner: AgentRunner
     tasks: List[Task]
     stats: SessionStats
+    home_pod: Optional[str] = None   # session->pod affinity (None = off)
     cursor: int = 0
     traces: List[TaskTrace] = dataclasses.field(default_factory=list)
     # keys this session prefetched and has not consumed yet (records stay
@@ -584,6 +648,15 @@ class EpisodeMetrics:
     replication_demotes: int = 0
     replication_agreement: float = 1.0
     replication_tokens: int = 0
+    # locality accounting (all zero when session->pod affinity is off):
+    # consumer-side read classification and cross-pod hop/link costs.
+    # local+remote partition the routed logical accesses (invariant locked
+    # in tests/test_locality.py)
+    locality_local_reads: int = 0
+    locality_remote_reads: int = 0
+    locality_remote_read_share: float = 0.0
+    locality_remote_hop_s: float = 0.0
+    locality_link_stall_s: float = 0.0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -632,7 +705,11 @@ class ConcurrentEpisodeEngine:
                  replication_impl: str = "python",
                  replication_kw: Optional[Dict] = None,
                  rows_range: Optional[tuple] = None,
-                 prefetch_adaptive: bool = False):
+                 prefetch_adaptive: bool = True,
+                 affinity: Optional[str] = None,
+                 remote_read_penalty: float = 1.0,
+                 affinity_kw: Optional[Dict] = None,
+                 link_queue: bool = False):
         assert n_sessions >= 1 and n_pods >= 1
         self.n_sessions = n_sessions
         self.n_pods = n_pods
@@ -650,6 +727,29 @@ class ConcurrentEpisodeEngine:
         self.scenario = scenario
         self.scenario_kw = dict(scenario_kw or {})
 
+        # session->pod affinity + consumer-side locality penalty (ISSUE 5):
+        # each session gets a home pod and every value consumed from a
+        # non-home pod pays a cross-pod hop of (penalty-1) x cache_read,
+        # optionally FCFS-serialized on the home pod's ingress link.
+        # ``affinity=None`` (the default) keeps the locality-free engine;
+        # penalty 1.0 with affinity on classifies reads without changing a
+        # single trace (the degeneracy contract tests/test_locality.py
+        # locks down).
+        self.affinity = None
+        self.locality = None
+        if affinity is not None:
+            self.affinity = make_affinity(affinity, n_pods=n_pods,
+                                          **(affinity_kw or {}))
+            self.locality = LocalityModel(self.latency,
+                                          penalty=remote_read_penalty,
+                                          link_queue=link_queue)
+        else:
+            assert remote_read_penalty == 1.0 and not link_queue \
+                and not affinity_kw, \
+                "remote_read_penalty/link_queue/affinity_kw require " \
+                "session->pod affinity (pass " \
+                "affinity='sticky'/'round_robin'/...)"
+
         # cross-session admission: ONE policy + ONE frequency sketch shared
         # by every pod and session (key popularity is global). The sketch
         # ages on simulated time — touches carry the session clocks, which
@@ -666,6 +766,10 @@ class ConcurrentEpisodeEngine:
                        if admission_impl == "llm" else None)
             adm = make_admission(admission, impl=admission_impl, llm=adm_llm,
                                  few_shot=few_shot)
+            if isinstance(adm, LLMAdmission):
+                # locality-aware prompt evidence: the GPT-driven admission
+                # path sees the candidate's remote consumer demand
+                adm.locality = self.locality
         self.admission_policy = adm
 
         # shared infrastructure: datastore + pod-sharded cache. Pod caches
@@ -678,6 +782,7 @@ class ConcurrentEpisodeEngine:
                                           capacity_per_pod=capacity_per_pod,
                                           policy_name=policy,
                                           admission=adm, sketch=self.sketch)
+        self.router.locality = self.locality
         self.contention = PodContention(self.pod_ids)
 
         # hot-key replication: one epoch-driven replicator over the shared
@@ -697,6 +802,12 @@ class ConcurrentEpisodeEngine:
                 self.router, self.sketch, self.store.peek, policy=rpol,
                 **rkw)
             self.router.spill = self.replicator.offer
+        if self.locality is not None and self.replicator is None:
+            # nothing drains the consumer-demand evidence without a
+            # replicator epoch: window it on sim time so prompt surfaces
+            # (LLM admission, cache_admit) see recent demand, not
+            # episode-lifetime counts
+            self.locality.demand_window_s = 60.0
 
     def _store_key(self):
         """Task-memo discriminator for datastore variants (frame content is
@@ -713,18 +824,46 @@ class ConcurrentEpisodeEngine:
         controller = SharedCacheController(
             self.router, rng=llm.rng,
             decision_eps=self.profile.cache_eps if self.llm_decisions else 0.0)
+        home_idx = (self.affinity.home(sid, 0)
+                    if self.affinity is not None else None)
+        scenario_kw = self.scenario_kw
+        if self.scenario == "affinity_zipf":
+            # per-pod hot sets: a session samples its HOME pod's group's
+            # zipf ranking (with cross-pod spillover — see WorkloadSampler);
+            # without affinity the group falls back to a round-robin split
+            scenario_kw = dict(scenario_kw)
+            scenario_kw.setdefault("n_groups", self.n_pods)
+            scenario_kw["group"] = (home_idx if home_idx is not None
+                                    else sid % scenario_kw["n_groups"])
         tasks = _memo_tasks(sseed, n_tasks, reuse_rate, self.scenario,
-                            self.scenario_kw, self.store, self._store_key())
+                            scenario_kw, self.store, self._store_key())
         session = Session(sid=sid, clock=clock, llm=llm, runner=None,
-                          tasks=tasks, stats=stats)
+                          tasks=tasks, stats=stats,
+                          home_pod=(self.pod_ids[home_idx]
+                                    if home_idx is not None else None))
         registry = ToolRegistry(
             make_shared_cache_tools(self.router, self.store, self.contention,
-                                    clock, session, events)
+                                    clock, session, events,
+                                    locality=self.locality)
             + make_geo_tools(clock))
         if self.replicator is not None:
             # replication as a callable cache op (like cache_admit): the
             # agent/controller can query the replicate/drop/hold verdict
             registry.register(make_replication_tool(self.replicator))
+        if self.admission_policy is not None:
+            # admission as a callable cache op against the owning pod's
+            # cache; with a locality model the verdict also reports the
+            # key's remote consumer demand by home pod
+            router = self.router
+            registry.register(make_admission_tool(
+                self.admission_policy, self.sketch,
+                entries_of=lambda key: router.pods[router.owner(key)
+                                                  ].entries(),
+                victim_of=lambda key, entries: router.policies[
+                    router.owner(key)].victim(entries),
+                capacity_of=lambda key: router.pods[router.owner(key)
+                                                    ].capacity,
+                locality=self.locality))
         on_plan = (self._make_prefetcher(session, events)
                    if self.prefetch else None)
         session.runner = AgentRunner(registry, controller, llm, clock,
@@ -831,20 +970,34 @@ class ConcurrentEpisodeEngine:
             # reliably precedes the first consume
             return lat.llm_round(plan_tok, PLAN_COMPLETION_TOKENS["react"])
 
+        loc = self.locality
+
         def prefetch(task: Task, plan: ReadPlan) -> None:
             now = session.clock.now()
             lat = session.clock.latency
+            home = session.home_pod
             # predicted seconds until the session consumes the NEXT key,
             # starting with the planning round it is about to pay
             eta = _plan_latency(task)
             consume_gap = lat.cache_read(self._MEAN_FRAME_MB)
+
+            def _gap(p: str) -> float:
+                # predicted consume cost of a pod-local read: inflated by
+                # the cross-pod hop when the serving pod is off-home (the
+                # owner approximates the serving pod — a home replica
+                # would be cheaper, which only makes the budget
+                # conservative). Exactly consume_gap at penalty 1x.
+                if loc is not None and p != home:
+                    return consume_gap * loc.penalty
+                return consume_gap
+
             for k in task.required_keys:
                 if plan.choices.get(k) != "load_db":
-                    eta += consume_gap        # pod-local read of a hit
+                    eta += _gap(router.owner(k))   # pod-local read of a hit
                     continue
                 pod = router.owner(k)
                 if k in router.in_flight or k in router.pods[pod]:
-                    eta += consume_gap        # join / hit at consume time
+                    eta += _gap(pod)          # join / hit at consume time
                     continue
                 frame = store.peek(k)
                 service = lat.db_load(frame.size_mb)
@@ -858,6 +1011,8 @@ class ConcurrentEpisodeEngine:
                     # position instead of ahead of other sessions' traffic
                     session.stats.prefetch_skipped += 1
                     eta += contention.expected_service_s(pod, service)
+                    if loc is not None and pod != home:
+                        eta += loc.hop_s(frame.size_mb)
                     continue
                 store.loads += 1
                 _, completes = contention.begin(pod, now, service)
@@ -868,18 +1023,24 @@ class ConcurrentEpisodeEngine:
                 session.stats.prefetch_issued += 1
                 events.push(completes, PRI_FINISH, payload=k)
                 # a later key cannot be consumed before this one lands
-                eta = max(eta, completes - now) + consume_gap
+                eta = max(eta, completes - now) + _gap(pod)
 
         return prefetch
 
     # -- event-granular scheduler -------------------------------------------
     def _session_body(self, s: Session):
         """Generator running one session's whole task stream; every inner
-        yield is a clock advance (an interleave point for the scheduler)."""
+        yield is a clock advance (an interleave point for the scheduler).
+        With affinity enabled the session's home pod is re-evaluated at
+        every task boundary (static policies return the same pod; the
+        ``migrating`` policy drifts it across the episode)."""
+        aff = self.affinity
         while True:
             task = s.next_task()
             if task is None:
                 return
+            if aff is not None:
+                s.home_pod = self.pod_ids[aff.home(s.sid, s.cursor - 1)]
             trace = yield from s.runner.iter_task(task)
             s.traces.append(trace)
 
@@ -957,6 +1118,10 @@ class ConcurrentEpisodeEngine:
             profiling.add("sketch.touches", self.sketch.touches)
             profiling.add("sketch.flushes", self.sketch.flushes)
             profiling.add("sketch.ages", self.sketch.ages)
+        if self.locality is not None:
+            lstats = self.locality.stats
+            profiling.add("engine.remote_reads", lstats.remote_reads)
+            profiling.add("engine.remote_hop_s", lstats.remote_hop_s)
 
     def _metrics(self, sessions: List[Session]) -> EpisodeMetrics:
         lat = np.array([tr.time_s for s in sessions for tr in s.traces],
@@ -1012,6 +1177,16 @@ class ConcurrentEpisodeEngine:
                                    if self.replicator else 1.0),
             replication_tokens=(self.replicator.tokens
                                 if self.replicator else 0),
+            locality_local_reads=(self.locality.stats.local_reads
+                                  if self.locality else 0),
+            locality_remote_reads=(self.locality.stats.remote_reads
+                                   if self.locality else 0),
+            locality_remote_read_share=(self.locality.stats.remote_share
+                                        if self.locality else 0.0),
+            locality_remote_hop_s=(self.locality.stats.remote_hop_s
+                                   if self.locality else 0.0),
+            locality_link_stall_s=(self.locality.stats.link_stall_s
+                                   if self.locality else 0.0),
         )
 
 

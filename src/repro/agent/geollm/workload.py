@@ -141,12 +141,24 @@ class WorkloadSampler:
     * ``"hotspot"`` — shifting phases: for ``phase_len`` key draws a hot
       set of ``hot_k`` keys serves ``hot_p`` of the traffic, then the hot
       set resamples. Tests how quickly admission+aging track drift.
+    * ``"affinity_zipf"`` — per-pod hot sets with cross-pod spillover (the
+      session->pod affinity regime, ISSUE 5): the key space is partitioned
+      round-robin into ``n_groups`` groups over a seed-INDEPENDENT shuffle
+      (every session agrees on the partition, like ``zipf_global``), each
+      group carries its own Zipf(``zipf_a``) ranking, and a sampler bound
+      to ``group`` g draws from its own group's ranking with probability
+      ``1 - spill_p``, else from a uniformly chosen *other* group's. The
+      concurrent engine binds ``group`` to the session's home pod, so each
+      pod's sessions share a hot set — but rendezvous hashing owns those
+      keys on arbitrary pods, which is exactly what makes consumer-side
+      locality (and consumer-targeted replication) matter.
     """
 
     def __init__(self, reuse_rate: float = 0.8, seed: int = 0,
                  scenario: str = "working", zipf_a: float = 1.2,
                  zipf_global: bool = False,
-                 hot_k: int = 4, hot_p: float = 0.9, phase_len: int = 60):
+                 hot_k: int = 4, hot_p: float = 0.9, phase_len: int = 60,
+                 n_groups: int = 4, group: int = 0, spill_p: float = 0.15):
         self.reuse_rate = reuse_rate
         self.rng = random.Random(seed)
         self.keys = all_keys()
@@ -169,6 +181,18 @@ class WorkloadSampler:
             self._zipf_keys = order
             w = [1.0 / (r + 1) ** zipf_a for r in range(len(order))]
             self._zipf_cum = list(itertools.accumulate(w))
+        if scenario == "affinity_zipf":
+            # seed-independent partition (all sessions agree on the groups)
+            order = list(self.keys)
+            random.Random(0x5EED).shuffle(order)
+            g = max(1, int(n_groups))
+            self._aff_groups = [order[i::g] for i in range(g)]
+            self._aff_cums = [
+                list(itertools.accumulate(1.0 / (r + 1) ** zipf_a
+                                          for r in range(len(grp))))
+                for grp in self._aff_groups]
+            self._aff_group = int(group) % g
+            self._aff_spill = spill_p
         self._scan_pos = 0
         self.hot_k, self.hot_p, self.phase_len = hot_k, hot_p, phase_len
         self._hot: List[str] = []
@@ -178,6 +202,15 @@ class WorkloadSampler:
         if self.scenario == "zipf":
             return self.rng.choices(self._zipf_keys,
                                     cum_weights=self._zipf_cum)[0]
+        if self.scenario == "affinity_zipf":
+            gi = self._aff_group
+            n = len(self._aff_groups)
+            if n > 1 and self.rng.random() < self._aff_spill:
+                gi = self.rng.randrange(n - 1)    # spill: another group's
+                if gi >= self._aff_group:         # hot set, uniformly
+                    gi += 1
+            return self.rng.choices(self._aff_groups[gi],
+                                    cum_weights=self._aff_cums[gi])[0]
         if self.scenario == "scan":
             key = self.keys[self._scan_pos % len(self.keys)]
             self._scan_pos += 1

@@ -382,6 +382,11 @@ class LLMAdmission(AdmissionPolicy):
         self.llm_correct = 0
         self.prompt_tokens = 0
         self.completion_tokens = 0
+        # locality evidence source (repro.core.locality.LocalityModel):
+        # wired by the concurrent engine under session->pod affinity; the
+        # prompt then exposes the candidate's remote consumer demand.
+        # None (the default) keeps the prompt byte-identical to PR-3/4.
+        self.locality = None
 
     def describe(self):
         return self.base.describe()
@@ -390,6 +395,12 @@ class LLMAdmission(AdmissionPolicy):
     def agreement(self) -> float:
         return self.llm_correct / self.llm_total if self.llm_total else 1.0
 
+    def _home_demand_json(self, key) -> Optional[str]:
+        if self.locality is None or self.locality.penalty <= 1.0:
+            return None
+        demand = self.locality.remote_demand.get(key)
+        return json.dumps(demand, sort_keys=True) if demand else None
+
     def admit(self, key, victim, sketch, entries, size_bytes=None):
         from repro.core.prompts import admission_decision_prompt, \
             parse_json_tail
@@ -397,7 +408,8 @@ class LLMAdmission(AdmissionPolicy):
                   if sketch is not None else (0, 0))
         prompt = admission_decision_prompt(
             self.base.describe(), key, victim, kf, vf,
-            entries_json(entries), self.few_shot)
+            entries_json(entries), self.few_shot,
+            home_demand_json=self._home_demand_json(key))
         completion = self.llm.complete(prompt)
         self.prompt_tokens += len(prompt) // 4
         self.completion_tokens += len(completion) // 4

@@ -134,6 +134,12 @@ class PodLocalCacheRouter:
         # cannot place it locally — another pod may hold someone globally
         # colder). None without replication.
         self.spill = None
+        # locality cost model (repro.core.locality.LocalityModel): set by
+        # the concurrent engine when session->pod affinity is enabled.
+        # None keeps every routing decision exactly the owner-first PR-4
+        # behavior; with a model whose penalty > 1, ``locate`` becomes
+        # cheapest-first and ``replicate`` targets consumer pods.
+        self.locality = None
 
     # -- membership ----------------------------------------------------------
     def fail_pod(self, pod_id: str):
@@ -168,14 +174,32 @@ class PodLocalCacheRouter:
             self._owner_memo[key] = pod
         return pod
 
-    def locate(self, key: str) -> Optional[str]:
-        """The pod whose cache currently holds ``key``: the owner when it
-        does (the common case and the only case without replication), else
-        the first live replica pod that still holds a copy (deterministic:
-        replica-list insertion order), else ``None``. Replica lists are
-        advisory — membership is verified against the actual pod cache."""
+    def locate(self, key: str, home: Optional[str] = None) -> Optional[str]:
+        """The pod whose cache currently holds ``key``, cheapest placement
+        first for the consumer homed on ``home``.
+
+        Without a locality penalty every pod-local read costs the same, so
+        the order is the PR-4 one: the owner when it holds the key (the
+        common case and the only case without replication), else the first
+        live replica pod that still holds a copy (deterministic:
+        replica-list insertion order), else ``None``. With a locality model
+        whose ``penalty > 1`` and a consumer ``home``, a copy on the home
+        pod is strictly cheaper than any other placement (it skips the
+        cross-pod hop), so it wins; all non-home placements still cost the
+        same single hop and keep the owner-first tie-break. Replica lists
+        are advisory — membership is verified against the actual pod
+        cache."""
         pod = self.owner(key)
-        if key in self.pods[pod]:
+        held = key in self.pods[pod]
+        if held and (home is None or pod == home):
+            return pod
+        if (home is not None and home != pod and self.locality is not None
+                and self.locality.penalty > 1.0):
+            pods = self.replicas.get(key)
+            if (pods and home in pods and self.alive.get(home, False)
+                    and key in self.pods[home]):
+                return home
+        if held:
             return pod
         pods = self.replicas.get(key)
         if pods:
@@ -246,9 +270,23 @@ class PodLocalCacheRouter:
         when the displaced stream is the globally coldest one available.
         Skips pods already holding a copy; skips pods whose coldest
         resident is at least as hot as ``key``. Returns the number of new
-        copies."""
+        copies.
+
+        With a locality model whose ``penalty > 1``, placement targets
+        **consumer pods**: hosts are ordered by the key's remote-read
+        demand from sessions homed there (``LocalityModel.remote_demand``,
+        highest first — a copy on such a pod converts every one of those
+        reads from a penalized hop into a pod-local hit), and the
+        gain-ratio arbitrage scales the key's frequency by ``penalty`` on
+        demanding hosts (each converted read is worth a whole hop, so the
+        swap clears the bar earlier exactly where the locality benefit is
+        real). At penalty 1x the demand map is ignored and the ordering is
+        bit-identical to the coldest-resident-first PR-4 rule."""
         owner = self.owner(key)
         kf = self.sketch.estimate(key) if self.sketch is not None else None
+        loc = self.locality
+        demand = (loc.remote_demand.get(key) or {}
+                  if loc is not None and loc.penalty > 1.0 else {})
         candidates = []
         for p in self.live_pods():
             if p == owner:
@@ -256,6 +294,7 @@ class PodLocalCacheRouter:
             cache = self.pods[p]
             if key in cache:
                 continue
+            gain = loc.penalty if demand.get(p) else 1.0
             victim = None
             vf = -1                      # free slot: cheapest possible host
             if len(cache) >= cache.capacity:
@@ -266,17 +305,17 @@ class PodLocalCacheRouter:
                     # the swap only pays when the key's stream decisively
                     # beats the displaced one: require a gain_ratio margin
                     # over the coldest resident (>= 1.0; higher = pickier)
-                    if kf is not None and kf < gain_ratio * max(vf, 1):
+                    if kf is not None and kf * gain < gain_ratio * max(vf, 1):
                         continue
                 else:
                     victim = self.policies[p].victim(entries)
                     vf = 0
-            candidates.append((vf, p, victim))
+            candidates.append((-demand.get(p, 0), vf, p, victim))
         candidates.sort()
         if fanout is not None:
             candidates = candidates[:fanout]
         installed = 0
-        for _, p, victim in candidates:
+        for _, _, p, victim in candidates:
             self.pods[p].put(key, value, size_bytes, victim=victim)
             pods = self.replicas.setdefault(key, [])
             if p not in pods:

@@ -10,7 +10,7 @@ Two prompt-based decisions:
 from __future__ import annotations
 
 import json
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 SYSTEM_HEADER = (
     "As a Copilot handling geospatial data, you have access to the following "
@@ -91,11 +91,17 @@ Answer: {"decision": "bypass"}
 
 def admission_decision_prompt(policy_text: str, key: str, victim: str,
                               key_freq: int, victim_freq: int,
-                              cache_json: str, few_shot: bool) -> str:
+                              cache_json: str, few_shot: bool,
+                              home_demand_json: Optional[str] = None) -> str:
     """Prompt for the GPT-driven admission decision: given the admission
     policy in natural language plus the frequency-sketch estimates, decide
     whether to ADMIT the candidate into the cache (evicting the victim) or
-    BYPASS it (serve the data through without caching)."""
+    BYPASS it (serve the data through without caching).
+
+    ``home_demand_json`` (only rendered when provided — the locality-free
+    prompt stays byte-identical) exposes the candidate's remote consumer
+    demand by home pod, so a locality-aware LLM can weigh WHO is paying
+    cross-pod hops for the key."""
     parts = [SYSTEM_HEADER,
              "You are now the cache admission controller. A key was just "
              "loaded from the database and the cache is FULL. Apply the "
@@ -110,6 +116,10 @@ def admission_decision_prompt(policy_text: str, key: str, victim: str,
     parts.append(f"Candidate key: {key} (estimated frequency: {key_freq})\n")
     parts.append(f"Eviction victim if admitted: {victim} "
                  f"(estimated frequency: {victim_freq})\n")
+    if home_demand_json is not None:
+        parts.append("Remote consumer demand for the candidate (reads "
+                     "paying a cross-pod hop, by consumer home pod): "
+                     f"{home_demand_json}\n")
     parts.append('Respond with a JSON object: {"decision": "admit"} or '
                  '{"decision": "bypass"}.\n')
     parts.append("Answer (JSON): ")
@@ -139,11 +149,19 @@ Answer: {"decision": "drop"}
 def replication_decision_prompt(policy_text: str, key: str, freq: int,
                                 replicated: bool, promote_min: int,
                                 demote_min: int, top_json: str,
-                                few_shot: bool) -> str:
+                                few_shot: bool,
+                                home_demand_json: Optional[str] = None,
+                                ) -> str:
     """Prompt for the GPT-driven hot-key replication decision: given the
     replication policy in natural language, the key's sketch estimate, and
     whether it is currently replicated, decide REPLICATE (push a copy to
-    every pod), DROP (remove its replicas) or HOLD (change nothing)."""
+    every pod), DROP (remove its replicas) or HOLD (change nothing).
+
+    ``home_demand_json`` (only rendered when provided — the locality-free
+    prompt stays byte-identical) exposes the key's remote consumer demand
+    by home pod: under a cross-pod read penalty, that is exactly the
+    evidence that says WHERE a copy converts penalized hops into pod-local
+    hits."""
     parts = [SYSTEM_HEADER,
              "You are now the cache REPLICATION controller of a pod-sharded "
              "deployment. Each key's data is cached on exactly one owner "
@@ -157,6 +175,10 @@ def replication_decision_prompt(policy_text: str, key: str, freq: int,
     parts.append(f"Hottest keys right now (frequency sketch): {top_json}\n")
     parts.append(f"Key: {key} (estimated frequency: {freq}; currently "
                  f"replicated: {'yes' if replicated else 'no'})\n")
+    if home_demand_json is not None:
+        parts.append("Remote consumer demand for the key (reads paying a "
+                     "cross-pod hop, by consumer home pod): "
+                     f"{home_demand_json}\n")
     parts.append(f"Thresholds: replicate at >= {promote_min}; drop a "
                  f"replica at < {demote_min}; otherwise hold.\n")
     parts.append('Respond with a JSON object: {"decision": "replicate"}, '

@@ -133,6 +133,7 @@ class LLMReplication(ReplicationPolicy):
         self.prompt_tokens = 0
         self.completion_tokens = 0
         self._top_json = "[]"          # evidence block, set per epoch
+        self._home_demand: Dict[str, Dict[str, int]] = {}   # locality feed
 
     def describe(self):
         return self.base.describe()
@@ -144,13 +145,24 @@ class LLMReplication(ReplicationPolicy):
     def set_evidence(self, top: List[Tuple[str, int]]) -> None:
         self._top_json = json.dumps([{"key": k, "freq": f} for k, f in top])
 
+    def set_home_demand(self, demand: Dict[str, Dict[str, int]]) -> None:
+        """Locality evidence: per-key remote-read counts by consumer home
+        pod (``LocalityModel.remote_demand``). Rendered into the prompt so
+        the GPT-driven path can reason about WHERE a copy would pay off;
+        empty (the default) leaves the prompt byte-identical to the
+        locality-free one."""
+        self._home_demand = demand
+
     def decide(self, key, freq, replicated):
         from repro.core.prompts import parse_json_tail, \
             replication_decision_prompt
+        hd = self._home_demand.get(key)
         prompt = replication_decision_prompt(
             self.base.describe(), key, freq, replicated,
             self.base.promote_min, self.base.demote_min,
-            self._top_json, self.few_shot)
+            self._top_json, self.few_shot,
+            home_demand_json=(json.dumps(hd, sort_keys=True) if hd
+                              else None))
         completion = self.llm.complete(prompt)
         self.prompt_tokens += len(prompt) // 4
         self.completion_tokens += len(completion) // 4
@@ -218,6 +230,36 @@ class HotKeyReplicator:
         self.replicated: Dict[str, int] = {}     # key -> promote epoch index
         self.stats = ReplicationStats()
 
+    def _locality(self):
+        """The router's locality model when it actually penalizes remote
+        reads (None otherwise — at penalty 1x a replica on a consumer pod
+        buys nothing a copy anywhere else wouldn't, so the feeds must stay
+        bit-identical to the locality-free replicator)."""
+        loc = getattr(self.router, "locality", None)
+        return loc if loc is not None and loc.penalty > 1.0 else None
+
+    def _demand(self, key: str) -> int:
+        """Promotion evidence for one key: physical demand loads since the
+        last epoch, plus — under a locality penalty — remote reads paying
+        cross-pod hops (a key can be perfectly resident at its owner and
+        still be worth a consumer-pod copy)."""
+        demand = self.router.demand_counts.get(key, 0)
+        loc = self._locality()
+        if loc is not None:
+            demand += sum(loc.remote_demand.get(key, {}).values())
+        return demand
+
+    def _sync_llm_evidence(self) -> None:
+        """Refresh the GPT-driven path's prompt evidence: the sketch's
+        current top-k plus (under a locality penalty) the per-key remote
+        consumer demand by home pod."""
+        if not isinstance(self.policy, LLMReplication):
+            return
+        self.policy.set_evidence(self.sketch.top_k(self.top_k))
+        loc = self._locality()
+        self.policy.set_home_demand(loc.remote_demand if loc is not None
+                                    else {})
+
     def offer(self, key: str, value, size_bytes: int) -> bool:
         """Spill promotion (between epochs): the owner pod just BYPASSED
         ``key`` — admission found it warmer than nothing but colder than
@@ -231,14 +273,13 @@ class HotKeyReplicator:
             return False
         if len(self.replicated) >= self.max_replicated:
             return False
-        if self.router.demand_counts.get(key, 0) < self.miss_min:
+        if self._demand(key) < self.miss_min:
             return False                 # one-shot traffic: not worth a slot
         freq = self.sketch.estimate(key)
-        if isinstance(self.policy, LLMReplication):
-            # spill decisions run between epochs: refresh the prompt's
-            # "hottest keys right now" evidence so the LLM is graded on
-            # the sketch state it actually sees
-            self.policy.set_evidence(self.sketch.top_k(self.top_k))
+        # spill decisions run between epochs: refresh the prompt's
+        # "hottest keys right now" (+ consumer demand) evidence so the
+        # LLM is graded on the state it actually sees
+        self._sync_llm_evidence()
         if self.policy.decide(key, freq, False) != "replicate":
             self.stats.holds += 1
             return False
@@ -264,9 +305,7 @@ class HotKeyReplicator:
     def run_epoch(self, now: float) -> None:
         st = self.stats
         st.epochs += 1
-        top = self.sketch.top_k(self.top_k)
-        if isinstance(self.policy, LLMReplication):
-            self.policy.set_evidence(top)
+        self._sync_llm_evidence()
         # demote pass: re-judge every replicated key against the aged
         # sketch, then apply the *utility veto* — a replica that served no
         # reads for a full epoch (grace: the epoch it was promoted in) is
@@ -313,9 +352,25 @@ class HotKeyReplicator:
         # (extra copies of it would buy nothing — reads resolve owner-first
         # at equal cost). The sketch still gates on global frequency
         # (``promote_min``) so one epoch's burst cannot promote a cold key.
+        # Under a locality penalty the feed gains the consumer term: remote
+        # reads paying cross-pod hops count alongside physical demand loads
+        # (a key resident at its owner never misses, but its off-home
+        # consumers still pay a hop per read — a copy on THEIR pod is the
+        # paper-faithful localized win). At penalty 1x the merged feed is
+        # exactly ``demand_counts`` — bit-identical to the locality-free
+        # replicator.
         missed = self.router.demand_counts
+        loc = self._locality()
+        if loc is not None and loc.remote_demand:
+            missed = dict(missed)
+            for key, per_pod in loc.remote_demand.items():
+                missed[key] = missed.get(key, 0) + sum(per_pod.values())
         feed = sorted(missed.items(), key=lambda kv: (-kv[1], kv[0]))
-        missed_clear = missed.clear      # drained whether promoted or not
+
+        def missed_clear():              # drained whether promoted or not
+            self.router.demand_counts.clear()
+            if loc is not None:
+                loc.remote_demand.clear()
         for key, miss_n in feed[:self.top_k]:
             if miss_n < self.miss_min or key in self.replicated:
                 continue

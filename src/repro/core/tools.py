@@ -79,7 +79,7 @@ def make_cache_tools(cache, datastore, clock) -> List[ToolSpec]:
 
 
 def make_admission_tool(admission, sketch, entries_of, victim_of,
-                        capacity_of) -> ToolSpec:
+                        capacity_of, locality=None) -> ToolSpec:
     """Admission as a callable cache op: ``cache_admit(key)`` answers
     whether a freshly loaded ``key`` would be installed or bypassed, with
     the evidence (victim + sketch estimates) the decision is based on.
@@ -90,22 +90,28 @@ def make_admission_tool(admission, sketch, entries_of, victim_of,
     owning cache's entries, ``victim_of(key, entries)`` the would-be
     eviction victim, ``capacity_of(key)`` the owning cache's capacity;
     factoring these out lets the single-cache runtime and the pod-sharded
-    router share one implementation.
+    router share one implementation. With a ``locality`` model wired
+    (session->pod affinity), the verdict additionally reports the key's
+    remote consumer demand by home pod — the evidence the locality-aware
+    prompt path reasons over.
     """
 
     def cache_admit(key: str):
         entries = entries_of(key)
         kf = sketch.estimate(key) if sketch is not None else 0
-        if len(entries) < capacity_of(key):
-            return {"key": key, "decision": "admit", "victim": None,
-                    "key_freq": kf, "victim_freq": 0,
-                    "reason": "cache not full"}
-        victim = victim_of(key, entries)
-        ok = admission.admit(key, victim, sketch, entries)
-        vf = sketch.estimate(victim) if sketch is not None else 0
-        return {"key": key, "decision": "admit" if ok else "bypass",
-                "victim": victim, "key_freq": kf, "victim_freq": vf,
-                "reason": admission.name}
+        out = {"key": key, "decision": "admit", "victim": None,
+               "key_freq": kf, "victim_freq": 0, "reason": "cache not full"}
+        if len(entries) >= capacity_of(key):
+            victim = victim_of(key, entries)
+            ok = admission.admit(key, victim, sketch, entries)
+            vf = sketch.estimate(victim) if sketch is not None else 0
+            out.update(decision="admit" if ok else "bypass", victim=victim,
+                       victim_freq=vf, reason=admission.name)
+        if locality is not None and locality.penalty > 1.0:
+            # only under a penalty — at 1x nothing populates the map (the
+            # same gate every other locality surface uses)
+            out["remote_demand"] = dict(locality.remote_demand.get(key, {}))
+        return out
 
     return ToolSpec(
         name="cache_admit",
@@ -142,11 +148,18 @@ def make_replication_tool(replicator) -> ToolSpec:
         freq = replicator.sketch.estimate_peek(key)
         replicated = key in replicator.replicated
         decision = base.decide(key, freq, replicated)
-        return {"key": key, "decision": decision, "key_freq": freq,
-                "replicated": replicated,
-                "promote_min": pol.promote_min,
-                "demote_min": pol.demote_min,
-                "reason": pol.name}
+        out = {"key": key, "decision": decision, "key_freq": freq,
+               "replicated": replicated,
+               "promote_min": pol.promote_min,
+               "demote_min": pol.demote_min,
+               "reason": pol.name}
+        locality = getattr(replicator.router, "locality", None)
+        if locality is not None and locality.penalty > 1.0:
+            # under a cross-pod penalty, the verdict surfaces WHO is
+            # paying hops for this key — the placement evidence
+            out["remote_demand"] = dict(
+                locality.remote_demand.get(key, {}))
+        return out
 
     return ToolSpec(
         name="cache_replicate",

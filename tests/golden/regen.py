@@ -1,0 +1,29 @@
+"""Regenerate the golden LLM transcripts for the locality-aware prompts.
+
+    PYTHONPATH=src:. python tests/golden/regen.py
+
+Only run this after an INTENTIONAL prompt or SimLLM change — the golden
+files exist so that unintentional drift fails tests/test_locality.py
+loudly. The transcripts are fully deterministic (fixed-seed SimLLM), so a
+regeneration on an unchanged tree is a no-op.
+"""
+import importlib.util
+import json
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+spec = importlib.util.spec_from_file_location(
+    "test_locality", HERE.parent / "test_locality.py")
+mod = importlib.util.module_from_spec(spec)
+sys.modules["test_locality"] = mod
+spec.loader.exec_module(mod)
+
+for name, builder in (
+        ("admission_locality", mod._build_admission_transcript),
+        ("replication_locality", mod._build_replication_transcript)):
+    path = HERE / f"{name}.json"
+    transcript = builder()
+    path.write_text(json.dumps(transcript, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path} (agreement {transcript['agreement']:.2%}, "
+          f"{len(transcript['decisions'])} decisions)")
