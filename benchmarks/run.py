@@ -107,6 +107,10 @@ def main() -> None:
                 "Session->pod affinity (cross-pod read penalty sweep)",
                 tables.table_locality, tasks_per_session=conc_tasks,
                 parallel=par)
+        section("resilience",
+                "Fault-injected elastic fleet (failover + recovery)",
+                tables.table_resilience, tasks_per_session=conc_tasks,
+                parallel=par)
     section("belady", "Beyond-paper: Belady oracle bound",
             tables.belady_bound, n=n23)
 
@@ -158,8 +162,18 @@ def main() -> None:
                     if c[2] == "16"}
         loc_256 = {(float(c[4]), c[5]): c for c in loc_rows
                    if c[2] == "256"}
+        res_rows = [r.split(",") for r in by_id.get("resilience", [])
+                    if r.startswith("resilience,")]
+        # acceptance cells: the single-pod fail+restore fault at seeds 1-3,
+        # replication off vs on — mean hit-EWMA recovery time
+        def _res_mean_recovery(config):
+            vals = [float(c[22]) for c in res_rows
+                    if c[4] == "single" and c[5] == config]
+            return round(sum(vals) / len(vals), 3) if vals else None
+        res_llm = next((c for c in res_rows if c[5] == "rec-llm"), None)
+        res_auto = next((c for c in res_rows if c[4] == "autoscale"), None)
         record = {
-            "schema": "bench_dcache/v4",
+            "schema": "bench_dcache/v5",
             "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "platform": {"python": platform.python_version(),
                          "machine": platform.machine()},
@@ -246,6 +260,21 @@ def main() -> None:
                                                    (2.0, "llm-repl"), 15),
                 "locality_256_repl_p95_speedup": _adm(loc_256,
                                                       (2.0, "repl"), 17),
+                # fault-injected fleet (ISSUE 6): hit-EWMA recovery time
+                # after the worst-case single-pod failure, mean over seeds
+                # 1-3 — replication-on must be measurably shorter
+                "resilience_recovery_s_repl_off": _res_mean_recovery(
+                    "repl-off"),
+                "resilience_recovery_s_repl_on": _res_mean_recovery(
+                    "repl-on"),
+                # zero-stall-forever gate: total unfinished sessions
+                # across every fault-matrix cell (must be 0)
+                "resilience_incomplete_total": (
+                    sum(int(c[32]) for c in res_rows) if res_rows else None),
+                "resilience_llm_agreement_pct": (float(res_llm[29])
+                                                 if res_llm else None),
+                "resilience_autoscale_actions": (int(res_auto[31])
+                                                 if res_auto else None),
             },
         }
         if args.profile:

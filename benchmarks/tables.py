@@ -18,6 +18,7 @@ from typing import Callable, Dict, List, Sequence
 import numpy as np
 
 from repro.agent import build_runtime, build_tasks, run_episode
+from repro.core.faults import FaultPlan
 
 # paper reference numbers for the summary comparison
 PAPER_MEAN_SPEEDUP = 1.24
@@ -480,6 +481,115 @@ def table_locality(tasks_per_session: int = 25,
             f"{m.p95_task_latency_s:.3f},{m.total_stall_s:.3f},"
             f"{m.replica_hits},{100 * m.replication_agreement:.2f},"
             f"{m.replication_tokens},{sp},{delta}")
+    return rows
+
+
+def table_resilience(tasks_per_session: int = 20,
+                     parallel: bool = False) -> List[str]:
+    """Beyond-paper: fault-injected elastic fleet (ISSUE 6).
+
+    Workload: the replication table's globally-aligned zipf skew at
+    ``capacity_per_pod=8`` (deeper caches mean a failure destroys real
+    state — at tiny capacities every lost key self-heals on its next
+    demand access and there is no transient to measure). The failed pod is
+    always **pod3**: under ``zipf_global`` the hot ranking is
+    seed-independent and rendezvous hashing owns the two globally hottest
+    keys (plus 4 of the top 8) on pod3 — the worst-case single-pod loss.
+
+    Fault matrix (all sim-time :class:`~repro.core.faults.FaultPlan`
+    schedules): ``none`` (EMPTY plan — the degeneracy reference: the fault
+    layer runs every hook yet replays the fault-free engine bit-identically,
+    locked by tests/test_faults.py), ``single`` (fail pod3 @60s, restore
+    @75s), ``double`` (correlated pod1+pod3 @60s, 15s downtime), ``churn``
+    (periodic round-robin failures every 30s), ``elastic`` (scale pod4 out
+    @40s, in @100s), and ``autoscale`` (no plan — the
+    :class:`~repro.core.faults.BacklogAutoscaler` drives scale_out/in from
+    the PR-4 backlog signals).
+
+    Config axis: replication off vs on — replication uses the
+    **durability feed** (``durability=True``: the sketch's global top-k is
+    judged alongside the miss feed, so hot *resident* keys get copies that
+    buy no latency but survive owner loss). The acceptance comparison is
+    the ``single`` fault at seeds 1-3: mean hit-EWMA recovery time must be
+    measurably shorter with replication on (replicas keep serving the lost
+    owner's hot keys, so the post-restore re-warm transient mostly
+    disappears). ``rec-thr``/``rec-llm`` rows add the post-failover
+    recovery policy (threshold re-warm vs GPT-prompted re-warm/lazy per
+    lost key, graded like admission/replication).
+
+    Row semantics: ``recovery_s`` is the mean time for the fast hit-EWMA
+    to regain ``recover_frac`` of the slow pre-failure baseline after
+    dipping (0 when a failure never dents the hit rate); ``fo_p95_s`` vs
+    ``steady_p95_s`` split task latency by whether the task ended inside a
+    failure->recovery window; ``incomplete`` counts sessions that never
+    finished their stream — the zero-stall-forever gate (always 0)."""
+    rows = ["table,scenario,n_sessions,n_pods,fault,config,seed,"
+            "local_hit_pct,p50_s,p95_s,failovers,restores,scale_outs,"
+            "scale_ins,aborted,retried,timeouts,lost_keys,lost_replicas,"
+            "pf_aborted,retry_wait_s,lost_work_s,recovery_s,unrecovered,"
+            "fo_p95_s,steady_p95_s,replica_hits,rewarms,lazy,"
+            "rec_agreement_pct,rec_tokens,autoscale_actions,incomplete"]
+    zipfg = {"scenario": "zipf",
+             "scenario_kw": {"zipf_a": 1.1, "zipf_global": True}}
+    # durability replication (see repro/core/replication.py): fanout 1
+    # keeps the replica capacity tax low enough that the survivors'
+    # caches are not crowded out during the down window
+    rkw = {"epoch_s": 20.0, "max_replicated": 8, "promote_min": 4,
+           "miss_min": 2, "gain_ratio": 2.0, "durability": True,
+           "fanout": 1}
+    pods = [f"pod{i}" for i in range(4)]
+    plans = {
+        "none": FaultPlan(),
+        "single": FaultPlan.single("pod3", 60.0, restore_at=75.0),
+        "double": FaultPlan.correlated(["pod1", "pod3"], 60.0,
+                                       downtime_s=15.0),
+        "churn": FaultPlan.periodic(pods, period_s=30.0, downtime_s=10.0,
+                                    start_s=30.0, horizon_s=120.0),
+        "elastic": FaultPlan.elastic("pod4", 40.0, in_at=100.0),
+    }
+    repl = {"replication": True, "replication_kw": rkw}
+    auto_kw = {"autoscale": True,
+               "autoscale_kw": {"check_every_s": 15.0, "high_backlog_s": 0.5,
+                                "low_backlog_s": 0.05, "max_extra": 2,
+                                "cooldown_s": 30.0}}
+    # (fault label, config label, seed, engine kwargs)
+    grid = []
+    for fault, plan in plans.items():
+        seeds = (1, 2, 3) if fault == "single" else (1,)
+        for seed in seeds:
+            grid.append((fault, "repl-off", seed, {"fault_plan": plan}))
+            grid.append((fault, "repl-on", seed,
+                         dict({"fault_plan": plan}, **repl)))
+    grid.append(("autoscale", "repl-off", 1, dict(auto_kw)))
+    single = plans["single"]
+    grid.append(("single", "rec-thr", 1,
+                 {"fault_plan": single, "recovery_impl": "python"}))
+    grid.append(("single", "rec-llm", 1,
+                 {"fault_plan": single, "recovery_impl": "llm"}))
+    cells = [lambda seed=seed, kw=kw: run_episode(
+                 16, tasks_per_session, n_pods=4, reuse_rate=0.3, seed=seed,
+                 prefetch=True, capacity_per_pod=8, **dict(zipfg, **kw))
+             for _f, _c, seed, kw in grid]
+    results = _run_cells(cells, parallel)
+    for (fault, config, seed, _kw), res in zip(grid, results):
+        m = res.metrics
+        rows.append(
+            f"resilience,zipfg-1.1,16,4,{fault},{config},{seed},"
+            f"{100 * m.local_hit_rate:.2f},{m.p50_task_latency_s:.3f},"
+            f"{m.p95_task_latency_s:.3f},{m.resilience_failovers},"
+            f"{m.resilience_restores},{m.resilience_scale_outs},"
+            f"{m.resilience_scale_ins},{m.resilience_aborted_loads},"
+            f"{m.resilience_retried_loads},{m.resilience_timeout_loads},"
+            f"{m.resilience_lost_keys},{m.resilience_lost_replicas},"
+            f"{m.resilience_prefetch_aborted},"
+            f"{m.resilience_retry_wait_s:.3f},"
+            f"{m.resilience_lost_work_s:.3f},"
+            f"{m.resilience_recovery_s:.3f},{m.resilience_unrecovered},"
+            f"{m.resilience_failover_p95_s:.3f},"
+            f"{m.resilience_steady_p95_s:.3f},{m.replica_hits},"
+            f"{m.recovery_rewarms},{m.recovery_lazy},"
+            f"{100 * m.recovery_agreement:.2f},{m.recovery_tokens},"
+            f"{m.autoscale_actions},{m.resilience_incomplete_sessions}")
     return rows
 
 

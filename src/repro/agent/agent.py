@@ -59,6 +59,15 @@ class TaskTrace:
     # loads this task streamed through the cache uninstalled (admission
     # bypass); always 0 without an admission policy
     cache_bypasses: int = 0
+    # fault accounting (filled by the concurrent engine's fault layer;
+    # always zero without a FaultPlan): retry cycles this task's aborted
+    # loads went through, the extra wait they charged, loads that fell
+    # back to direct DB reads after exhausting the retry budget, and
+    # service seconds wasted on pods that died mid-load
+    retried_loads: int = 0
+    retry_wait_s: float = 0.0
+    timeout_loads: int = 0
+    lost_work_s: float = 0.0
 
 
 class AgentRunner:

@@ -80,6 +80,8 @@ class SimLLM:
             return self._admission_decision(prompt)
         if "REPLICATION controller" in prompt:
             return self._replication_decision(prompt)
+        if "RECOVERY controller" in prompt:
+            return self._recovery_decision(prompt)
         # planning / answer prompts: canned completion (token accounting is
         # handled by the agent's latency model)
         return ("Thought: I will decompose the task and call the tools in "
@@ -183,6 +185,21 @@ class SimLLM:
                 decision = "hold"
         return ("Thought: comparing the key's frequency against the "
                 "promote/demote thresholds.\n"
+                f'Answer: {json.dumps({"decision": decision})}')
+
+    # -- post-failover RECOVERY ----------------------------------------------
+    def _recovery_decision(self, prompt: str) -> str:
+        """Failover recovery decided by reading the policy text: the lost
+        key's sketch estimate and the re-warm threshold are in the prompt;
+        the calibrated error rate flips the verdict."""
+        freq = int(re.findall(r"Lost key: \S+ \(estimated frequency: "
+                              r"(\d+)\)", prompt)[-1])
+        rewarm_min = int(re.findall(r"re-warm at >= (\d+)", prompt)[-1])
+        decision = "rewarm" if freq >= rewarm_min else "lazy"
+        if self.rng.random() < self.profile.cache_eps:
+            decision = "lazy" if decision == "rewarm" else "rewarm"
+        return ("Thought: weighing the lost key's frequency against the "
+                "re-warm threshold.\n"
                 f'Answer: {json.dumps({"decision": decision})}')
 
     def _victim(self, state: Dict[str, dict], policy_text: str,

@@ -96,19 +96,39 @@ from repro.agent.geollm.workload import Task, WorkloadSampler, compute_gold
 from repro.core import profiling
 from repro.core.admission import FrequencySketch, LLMAdmission, make_admission
 from repro.core.controller import ReadPlan
-from repro.core.distributed_cache import InFlightLoad, PodLocalCacheRouter
+from repro.core.distributed_cache import (
+    FailoverReport,
+    InFlightLoad,
+    PodLocalCacheRouter,
+)
+from repro.core.faults import (
+    FAIL,
+    RESTORE,
+    SCALE_IN,
+    SCALE_OUT,
+    BacklogAutoscaler,
+    FaultEvent,
+    FaultPlan,
+    LLMRecovery,
+    RetryPolicy,
+    make_recovery,
+)
 from repro.core.locality import LocalityModel, make_affinity
 from repro.core.replication import HotKeyReplicator, make_replication
 from repro.core.tools import (
     ToolRegistry,
     ToolSpec,
     make_admission_tool,
+    make_recovery_tool,
     make_replication_tool,
 )
 
-# event priorities: pod-load completions run before session resumes at the
-# same instant, so a session resuming exactly at a completion time observes
-# the key already installed.
+# event priorities: membership changes (faults) run before pod-load
+# completions at the same instant — a load completing exactly at its pod's
+# fail time ABORTS — and completions run before session resumes, so a
+# session resuming exactly at a completion time observes the key already
+# installed.
+PRI_FAULT = -1
 PRI_FINISH = 0
 PRI_SESSION = 1
 
@@ -291,6 +311,47 @@ class PodContention:
         demand, stalled = self.demand_stats_total()
         return demand + self._pf_consumes, stalled + self._pf_waited
 
+    def reissue(self, pod: str, now: float,
+                service_s: float) -> Tuple[float, float]:
+        """Re-issue an aborted demand load on a new pod (fault retry):
+        like :meth:`begin` it returns ``(service_start, completion)`` and
+        charges no clock here — the aborted waiters pay the *extra* wait
+        at the retry handler — but it is accounted as demand traffic, not
+        prefetch (per-pod diagnostics stay truthful)."""
+        self.arrival_log.append(now)
+        i = self._idx[pod]
+        start = max(now, float(self._busy_until[i]))
+        self._busy_until[i] = start + service_s
+        self._loads[i] += 1
+        self._demand[i] += 1
+        self._observe(i, service_s)
+        return start, start + service_s
+
+    def add_pod(self, pod_id: str) -> None:
+        """Elastic scale-out: extend the per-pod arrays with a fresh (idle)
+        slot. Membership changes are rare, so the O(n) array copies are
+        nowhere near the hot path."""
+        if pod_id in self._idx:
+            return
+        self._idx[pod_id] = len(self.pod_ids)
+        self.pod_ids.append(pod_id)
+        self._loads = np.append(self._loads, 0)
+        self._demand = np.append(self._demand, 0)
+        self._prefetch = np.append(self._prefetch, 0)
+        self._stalled = np.append(self._stalled, 0)
+        self._stall_s = np.append(self._stall_s, 0.0)
+        self._busy_until = np.append(self._busy_until, 0.0)
+        self._overlap = np.append(self._overlap, 0.0)
+        self._ewma = np.append(self._ewma, 0.0)
+
+    def clamp_busy(self, pod: str, now: float) -> None:
+        """Pod failure: whatever service was queued/running on the pod
+        died with it — the busy window must not outlive the pod, or a
+        restored (cold, idle) pod would inherit phantom backlog."""
+        i = self._idx[pod]
+        if float(self._busy_until[i]) > now:
+            self._busy_until[i] = now
+
     def join_stall(self, pod: str, wait_s: float) -> None:
         """A session queued behind another session's *demand* load of the
         same key (in-flight join): counts as a stalled acquisition."""
@@ -382,6 +443,7 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
                             session: "Session",
                             events: EventQueue,
                             locality: Optional[LocalityModel] = None,
+                            faults: Optional["FaultRuntime"] = None,
                             ) -> List[ToolSpec]:
     """Per-session ``read_cache`` / ``load_db`` bound to the shared router.
 
@@ -472,6 +534,8 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
             router.stats.replica_hits += 1
             router.replica_reads[key] = router.replica_reads.get(key, 0) + 1
         router.note_access(key, clock.now())
+        if faults is not None:
+            faults.note_access(1.0, clock.now())
         clock.advance(clock.latency.cache_read(value.size_mb))
         _consume(key, pod, value.size_mb)
         return value
@@ -496,6 +560,12 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
                 stats.stalled_loads += 1
                 stats.stall_s += wait
                 contention.join_stall(pod, wait)
+            if faults is not None:
+                faults.note_access(0.0, now)
+                if wait > 0:
+                    # the join waits out the record's residual service: if
+                    # the serving pod dies first, this session retries
+                    faults.note_waiter(key, session)
             clock.advance(wait)
             _consume(key, rec.pod, rec.value.size_mb)
             return rec.value
@@ -508,6 +578,8 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
             stats.prefetch_hits += 1
             contention.note_prefetch_consume(0.0)
             _credit_once(own, now)
+            if faults is not None:
+                faults.note_access(1.0, now)
             clock.advance(clock.latency.cache_read(value.size_mb))
             _consume(key, pod, value.size_mb)
             return value
@@ -520,6 +592,8 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
             stats.prefetch_hits += 1
             contention.note_prefetch_consume(0.0)
             _credit_once(own, now)
+            if faults is not None:
+                faults.note_access(0.0, now)
             clock.advance(clock.latency.cache_read(own.value.size_mb))
             _consume(key, own.pod, own.value.size_mb)
             return own.value
@@ -539,6 +613,12 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
         router.start_load(key, frame, frame.size_bytes, issued_at=now,
                           completes_at=now + dwell, prefetched=False)
         events.push(now + dwell, PRI_FINISH, payload=key)
+        if faults is not None:
+            faults.note_access(0.0, now)
+            # the issuer waits out the whole dwell: if the owning pod dies
+            # before completes_at, this session retries against the new
+            # rendezvous owner (bounded backoff, then DB bypass)
+            faults.note_waiter(key, session)
         clock.advance(dwell)
         _consume(key, pod, frame.size_mb)
         return frame
@@ -578,6 +658,15 @@ class SessionStats:
     # cross-pod hop seconds (incl. ingress-link waits) charged for them
     remote_reads: int = 0
     remote_hop_s: float = 0.0
+    # fault accounting (all zero without a FaultPlan): retry cycles this
+    # session's aborted loads went through, the extra wait those retries
+    # charged beyond the original completion, loads that exhausted the
+    # retry budget and bypassed to direct DB reads, and service seconds
+    # this session had already waited out on pods that then died
+    retried_loads: int = 0
+    retry_wait_s: float = 0.0
+    timeout_loads: int = 0
+    lost_work_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -602,6 +691,353 @@ class Session:
         t = self.tasks[self.cursor]
         self.cursor += 1
         return t
+
+
+# ---------------------------------------------------------------------------
+# Fault runtime: membership changes as first-class scheduler events
+# ---------------------------------------------------------------------------
+
+class RetryEvent:
+    """Scheduled re-attempt for the waiters of an aborted in-flight load:
+    fires at ``abort_time + backoff`` and re-resolves the key against the
+    *current* fleet (join a live in-flight record, read a surviving copy,
+    re-issue on the new rendezvous owner, or — past the retry budget —
+    bypass to a direct DB read)."""
+
+    __slots__ = ("key", "waiters", "attempt")
+
+    def __init__(self, key: str, waiters: List[Session], attempt: int):
+        self.key = key
+        self.waiters = waiters
+        self.attempt = attempt
+
+
+class FaultRuntime:
+    """Engine-side semantics of a :class:`~repro.core.faults.FaultPlan`.
+
+    The plan's events enter the scheduler heap at ``PRI_FAULT`` (before
+    same-instant completions: a load completing exactly at its pod's fail
+    time aborts). This runtime gives each membership change its real
+    consequences, all inside the deterministic event order:
+
+    * **abort/retry** — sessions whose pending resume sits at an aborted
+      load's ``completes_at`` (the issuer and every joiner — registered
+      via :meth:`note_waiter` when they charged the wait) get a
+      :class:`RetryEvent` after bounded exponential backoff
+      (:class:`~repro.core.faults.RetryPolicy`). At fire time the key is
+      re-resolved; waiters whose new completion lands *later* than their
+      already-charged clock advance by the difference and their stale
+      resume events are superseded (``resume_at`` — the hot loop skips
+      session events older than it). A waiter already past the new
+      completion keeps its original timing. After ``max_retries`` aborts
+      of one key the waiters bypass to a direct DB read — structurally
+      never a stall-forever;
+    * **prefetch aborts** — a dying pod's in-flight prefetches are purged
+      from their issuing session's ``prefetched`` map (``pf_owner``), so
+      the consume falls through to a plain demand load;
+    * **warm-up transient** — a hit EWMA over logical accesses
+      (:meth:`note_access`) is snapshotted at each failure; the transient
+      closes when the EWMA regains ``recover_frac`` of its pre-failure
+      value. ``task_ends`` lets :meth:`attributed_p95` split task latency
+      into failover-window vs steady-state tails;
+    * **GPT-driven recovery** — per hot key lost with the pod, the
+      recovery policy (threshold or LLM-prompted) decides re-warm-now
+      (a background load onto the new owner) vs lazy refill; keys a
+      surviving replica still serves skip the decision entirely;
+    * **autoscaling** — a :class:`~repro.core.faults.BacklogAutoscaler`
+      polled at sim-time boundaries (like replication epochs) drives
+      ``scale_out``/``scale_in`` from the contention layer's backlog.
+
+    Degeneracy: with an empty plan and no autoscaler every hook is pure
+    bookkeeping — no clock moves, no event is added — and the engine
+    replays the fault-free traces bit-identically (locked by
+    tests/test_faults.py)."""
+
+    def __init__(self, engine: "ConcurrentEpisodeEngine", events: EventQueue,
+                 retry: RetryPolicy, recovery=None,
+                 scaler: Optional[BacklogAutoscaler] = None,
+                 hit_alpha: float = 0.05, recover_frac: float = 0.95,
+                 recover_k: int = 8):
+        self.engine = engine
+        self.router = engine.router
+        self.contention = engine.contention
+        self.store = engine.store
+        self.latency = engine.latency
+        self.events = events
+        self.retry = retry
+        self.recovery = recovery
+        self.scaler = scaler
+        self.sessions: List[Session] = []      # filled by run()
+        # waiting-session bookkeeping
+        self.waiters: Dict[str, List[Session]] = {}
+        self.attempts: Dict[str, int] = {}
+        self.pf_owner: Dict[str, Session] = {}
+        self.resume_at: Dict[int, float] = {}
+        # hit EWMAs + failover transients: the FAST ewma tracks the dip
+        # and the recovery, while the SLOW one (an order of magnitude
+        # slower) is the stable pre-failure baseline the transient is
+        # snapshotted against — snapshotting the fast ewma would make
+        # the recovery bar hostage to whatever noise peak the failure
+        # instant happened to land on
+        self.hit_alpha = hit_alpha
+        self.base_alpha = hit_alpha / 10.0
+        self.recover_frac = recover_frac
+        self.recover_k = recover_k
+        self.hit_ewma = 0.0
+        self.hit_base = 0.0
+        self._ewma_init = False
+        self.transients: List[Dict] = []
+        self._open = 0
+        self.task_ends: List[Tuple[float, float]] = []
+        # counters
+        self.restores = 0
+        self.prefetch_aborted = 0
+        self.lost_work_s = 0.0
+        self.lost_keys_n = 0
+        self.lost_replicas_n = 0
+        self.rewarms = 0
+        self.lazy = 0
+        self.autoscale_actions = 0
+
+    # -- hooks from the data plane (pure bookkeeping) ------------------------
+    def note_waiter(self, key: str, session: Session) -> None:
+        self.waiters.setdefault(key, []).append(session)
+
+    def note_finish(self, key: str) -> None:
+        self.waiters.pop(key, None)
+        self.attempts.pop(key, None)
+
+    def note_access(self, hit: float, now: float) -> None:
+        if not self._ewma_init:
+            self.hit_ewma = self.hit_base = hit
+            self._ewma_init = True
+        else:
+            self.hit_ewma += self.hit_alpha * (hit - self.hit_ewma)
+            self.hit_base += self.base_alpha * (hit - self.hit_base)
+        if self._open:
+            for tr in self.transients:
+                if tr["recovered_at"] is not None:
+                    continue
+                # a transient must first DIP below the threshold before it
+                # can close — otherwise the first post-failure hit would
+                # close it instantly and "recovery time" would measure
+                # nothing. A transient that never dips at all reports
+                # recovery 0 (the failure never dented the hit rate — with
+                # replication on, that is exactly the win being measured).
+                # Closing takes ``recover_k`` consecutive accesses at/above
+                # the bar: a single fast-EWMA noise spike inside the miss
+                # burst must not read as "recovered". The recovery INSTANT
+                # is the first access of the qualifying streak.
+                if self.hit_ewma < self.recover_frac * tr["pre_ewma"]:
+                    tr["dipped"] = True
+                    tr["_above"] = 0
+                elif tr["dipped"]:
+                    if tr["_above"] == 0:
+                        tr["_since"] = now
+                    tr["_above"] += 1
+                    if tr["_above"] >= self.recover_k:
+                        tr["recovered_at"] = tr["_since"]
+                        self._open -= 1
+
+    # -- event handlers ------------------------------------------------------
+    def handle(self, t: float, payload) -> None:
+        if payload.__class__ is RetryEvent:
+            self._handle_retry(t, payload)
+            return
+        ev: FaultEvent = payload
+        router = self.router
+        if ev.action == FAIL:
+            report = router.fail_pod(ev.pod)
+            if report is None:
+                return                      # idempotent: already down
+            self.contention.clamp_busy(ev.pod, t)
+            self.lost_keys_n += len(report.lost_keys)
+            self.lost_replicas_n += len(report.lost_replicas)
+            self.transients.append({
+                "pod": ev.pod, "at": t, "pre_ewma": self.hit_base,
+                "recovered_at": None, "dipped": False,
+                "lost_keys": len(report.lost_keys),
+                "lost_replicas": len(report.lost_replicas)})
+            self._open += 1
+            self._handle_aborts(report, t)
+            self._recover(report, t)
+        elif ev.action == RESTORE:
+            if router.restore_pod(ev.pod):
+                self.restores += 1
+        elif ev.action == SCALE_OUT:
+            router.scale_out(ev.pod)
+            self.contention.add_pod(ev.pod)
+        else:                               # SCALE_IN
+            report = router.scale_in(ev.pod)
+            if report is not None:
+                self.contention.clamp_busy(ev.pod, t)
+                self._handle_aborts(report, t)
+
+    def _handle_aborts(self, report: FailoverReport, t: float) -> None:
+        for rec in report.aborted:
+            lost = max(0.0, min(t, rec.completes_at) - rec.issued_at)
+            self.lost_work_s += lost
+            if rec.prefetched:
+                owner = self.pf_owner.get(rec.key)
+                if (owner is not None
+                        and owner.prefetched.get(rec.key) is rec):
+                    del owner.prefetched[rec.key]
+                    self.prefetch_aborted += 1
+            waiters = self.waiters.pop(rec.key, [])
+            attempt = self.attempts.pop(rec.key, 0) + 1
+            if not waiters:
+                continue
+            for s in waiters:
+                s.stats.lost_work_s += lost
+            self.events.push(t + self.retry.delay(attempt), PRI_FINISH,
+                             payload=RetryEvent(rec.key, waiters, attempt))
+
+    def _handle_retry(self, t: float, ev: RetryEvent) -> None:
+        router, contention = self.router, self.contention
+        key, timeout = ev.key, False
+        rec = router.in_flight.get(key)
+        registrable = False
+        if rec is not None:
+            # another load of the key is live (someone re-demanded it, or
+            # a recovery re-warm is running): join it
+            completes = rec.completes_at
+            rec.joiners += len(ev.waiters)
+            registrable = True
+        else:
+            frame = self.store.peek(key)
+            if router.locate(key) is not None:
+                # a surviving copy (owner re-fill, or a replica that
+                # outlived its owner) serves the retry as a pod-local
+                # read — replication doubling as resilience
+                completes = t + self.latency.cache_read(frame.size_mb)
+            elif ev.attempt > self.retry.max_retries:
+                # retry budget exhausted: bypass to a direct DB read (no
+                # pod, no queueing, nothing left to abort) — the bounded
+                # guarantee that no session stalls forever
+                completes = t + self.latency.db_load(frame.size_mb)
+                router.stats.timeout_loads += 1
+                timeout = True
+            else:
+                owner = router.owner(key)
+                service = self.latency.db_load(frame.size_mb)
+                _, completes = contention.reissue(owner, t, service)
+                router.start_load(key, frame, frame.size_bytes, issued_at=t,
+                                  completes_at=completes, prefetched=False)
+                self.events.push(completes, PRI_FINISH, payload=key)
+                router.stats.retried_loads += 1
+                registrable = True
+        still_waiting = []
+        for s in ev.waiters:
+            s.stats.retried_loads += 1
+            if timeout:
+                s.stats.timeout_loads += 1
+            extra = completes - s.clock.now()
+            if extra > 0:
+                # the waiter's already-charged wait undershot the new
+                # completion: extend its clock and supersede its stale
+                # resume event (the hot loop skips events older than
+                # ``resume_at``). A waiter already past the new completion
+                # keeps its original timing.
+                s.stats.retry_wait_s += extra
+                s.clock.advance(extra)
+                self.resume_at[s.sid] = s.clock.now()
+                self.events.push(s.clock.now(), PRI_SESSION, s.sid, s.sid)
+                still_waiting.append(s)
+        if registrable and still_waiting:
+            # the new record can abort too: keep the chain alive
+            self.waiters.setdefault(key, []).extend(still_waiting)
+            self.attempts[key] = ev.attempt
+
+    def _recover(self, report: FailoverReport, t: float) -> None:
+        pol = self.recovery
+        if pol is None or not report.lost_keys:
+            return
+        router, sketch = self.router, self.engine.sketch
+        if isinstance(pol, LLMRecovery) and sketch is not None:
+            pol.set_evidence(sketch.top_k(8))
+        for key in report.lost_keys:
+            if key in router.in_flight or router.locate(key) is not None:
+                continue        # survived (replica / re-fill): no decision
+            freq = int(sketch.estimate(key)) if sketch is not None else 0
+            if pol.decide(key, freq) != "rewarm":
+                self.lazy += 1
+                continue
+            frame = self.store.peek(key)
+            service = self.latency.db_load(frame.size_mb)
+            owner = router.owner(key)
+            _, completes = self.contention.begin(owner, t, service)
+            router.start_load(key, frame, frame.size_bytes, issued_at=t,
+                              completes_at=completes, prefetched=True)
+            self.events.push(completes, PRI_FINISH, payload=key)
+            self.rewarms += 1
+
+    # -- autoscaling ---------------------------------------------------------
+    def run_autoscaler(self, t: float) -> None:
+        sc = self.scaler
+        while t >= sc.next_check:
+            now = sc.next_check
+            backlogs = {p: self.contention.backlog_s(p, now)
+                        for p in self.router.live_pods()}
+            action = sc.decide(now, backlogs)
+            if action == SCALE_OUT:
+                pod = self._new_pod()
+                self.router.scale_out(pod)
+                self.contention.add_pod(pod)
+                sc.note_action(now, SCALE_OUT, pod)
+                self.autoscale_actions += 1
+            elif action == SCALE_IN:
+                pod = sc.added[-1]
+                report = self.router.scale_in(pod)
+                if report is not None:
+                    self.contention.clamp_busy(pod, now)
+                    self._handle_aborts(report, now)
+                sc.note_action(now, SCALE_IN, pod)
+                self.autoscale_actions += 1
+            sc.next_check += sc.check_every_s
+
+    def _new_pod(self) -> str:
+        n = len(self.router.pods)
+        while f"pod{n}" in self.router.pods:
+            n += 1
+        return f"pod{n}"
+
+    # -- reporting -----------------------------------------------------------
+    def recovery_stats(self) -> Tuple[float, int]:
+        """(mean hit-EWMA recovery time across transients, transients
+        still open at episode end). A transient that never dipped below
+        the threshold counts as recovery 0 — the failure never dented
+        the hit rate; only dipped-and-never-recovered transients count
+        as open (``resilience_unrecovered``)."""
+        closed: List[float] = []
+        open_n = 0
+        for tr in self.transients:
+            if tr["recovered_at"] is not None:
+                closed.append(tr["recovered_at"] - tr["at"])
+            elif tr["dipped"]:
+                open_n += 1
+            else:
+                closed.append(0.0)
+        return (sum(closed) / len(closed) if closed else 0.0), open_n
+
+    def attributed_p95(self) -> Tuple[float, float]:
+        """Task-latency p95 split into tasks ending inside a failover
+        window (failure -> EWMA recovery; unclosed windows extend to the
+        episode end) vs steady state."""
+        windows = [(tr["at"],
+                    tr["recovered_at"] if tr["recovered_at"] is not None
+                    else (float("inf") if tr["dipped"] else tr["at"]))
+                   for tr in self.transients]
+        if not windows or not self.task_ends:
+            return 0.0, 0.0
+        inside: List[float] = []
+        outside: List[float] = []
+        for end, dur in self.task_ends:
+            (inside if any(a <= end <= b for a, b in windows)
+             else outside).append(dur)
+
+        def p95(xs):
+            return float(np.percentile(np.asarray(xs), 95)) if xs else 0.0
+        return p95(inside), p95(outside)
 
 
 @dataclasses.dataclass
@@ -657,6 +1093,36 @@ class EpisodeMetrics:
     locality_remote_read_share: float = 0.0
     locality_remote_hop_s: float = 0.0
     locality_link_stall_s: float = 0.0
+    # resilience accounting (all zero / defaults without a FaultPlan or
+    # autoscaler). recovery_s is the mean hit-EWMA recovery time across
+    # closed failover transients; failover/steady p95 split task latency
+    # by whether the task ended inside a failure->recovery window;
+    # incomplete_sessions counts sessions that did not finish their task
+    # stream (the zero-stall-forever acceptance gate: always 0)
+    resilience_failovers: int = 0
+    resilience_restores: int = 0
+    resilience_scale_outs: int = 0
+    resilience_scale_ins: int = 0
+    resilience_aborted_loads: int = 0
+    resilience_retried_loads: int = 0
+    resilience_timeout_loads: int = 0
+    resilience_retry_wait_s: float = 0.0
+    resilience_lost_work_s: float = 0.0
+    resilience_lost_keys: int = 0
+    resilience_lost_replicas: int = 0
+    resilience_prefetch_aborted: int = 0
+    resilience_recovery_s: float = 0.0
+    resilience_unrecovered: int = 0
+    resilience_failover_p95_s: float = 0.0
+    resilience_steady_p95_s: float = 0.0
+    resilience_incomplete_sessions: int = 0
+    # GPT-driven post-failover recovery (re-warm vs lazy); token cost is
+    # off the critical path like admission/replication decisions
+    recovery_rewarms: int = 0
+    recovery_lazy: int = 0
+    recovery_agreement: float = 1.0
+    recovery_tokens: int = 0
+    autoscale_actions: int = 0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -709,7 +1175,14 @@ class ConcurrentEpisodeEngine:
                  affinity: Optional[str] = None,
                  remote_read_penalty: float = 1.0,
                  affinity_kw: Optional[Dict] = None,
-                 link_queue: bool = False):
+                 link_queue: bool = False,
+                 fault_plan: Optional[FaultPlan] = None,
+                 retry_kw: Optional[Dict] = None,
+                 recovery_impl: Optional[str] = None,
+                 recovery_kw: Optional[Dict] = None,
+                 autoscale: bool = False,
+                 autoscale_kw: Optional[Dict] = None,
+                 fault_kw: Optional[Dict] = None):
         assert n_sessions >= 1 and n_pods >= 1
         self.n_sessions = n_sessions
         self.n_pods = n_pods
@@ -750,6 +1223,29 @@ class ConcurrentEpisodeEngine:
                 "session->pod affinity (pass " \
                 "affinity='sticky'/'round_robin'/...)"
 
+        # fault/elasticity layer (ISSUE 6): a sim-time FaultPlan turns
+        # membership changes into first-class scheduler events; the
+        # runtime itself is built per run() (it needs the event queue).
+        # ``fault_plan=None`` AND ``autoscale=False`` skip the layer
+        # entirely; an EMPTY (non-None) FaultPlan runs with every hook
+        # live but replays the fault-free engine bit-identically (the
+        # degeneracy contract tests/test_faults.py locks down).
+        self.fault_plan = fault_plan
+        self.retry_policy = RetryPolicy(**(retry_kw or {}))
+        self.fault_kw = dict(fault_kw or {})
+        self.autoscaler = (BacklogAutoscaler(**(autoscale_kw or {}))
+                           if autoscale else None)
+        assert autoscale or not autoscale_kw, \
+            "autoscale_kw requires autoscale=True"
+        self.recovery_policy = None
+        if recovery_impl is not None:
+            rec_llm = (SimLLM(self.profile, seed=seed + 331999)
+                       if recovery_impl == "llm" else None)
+            self.recovery_policy = make_recovery(
+                impl=recovery_impl, llm=rec_llm, few_shot=few_shot,
+                **(recovery_kw or {}))
+        self._faults = None
+
         # cross-session admission: ONE policy + ONE frequency sketch shared
         # by every pod and session (key popularity is global). The sketch
         # ages on simulated time — touches carry the session clocks, which
@@ -760,6 +1256,11 @@ class ConcurrentEpisodeEngine:
         self.sketch = None
         adm = None
         if admission is not None or replication:
+            self.sketch = FrequencySketch(**(sketch_kw or {}))
+        elif self.recovery_policy is not None:
+            # post-failover recovery judges lost keys on sketch frequency;
+            # without admission/replication nothing else reads it, so its
+            # presence cannot change a single routing decision
             self.sketch = FrequencySketch(**(sketch_kw or {}))
         if admission is not None:
             adm_llm = (SimLLM(self.profile, seed=seed + 104729)
@@ -844,8 +1345,15 @@ class ConcurrentEpisodeEngine:
         registry = ToolRegistry(
             make_shared_cache_tools(self.router, self.store, self.contention,
                                     clock, session, events,
-                                    locality=self.locality)
+                                    locality=self.locality,
+                                    faults=self._faults)
             + make_geo_tools(clock))
+        if self.recovery_policy is not None:
+            # post-failover recovery as a callable cache op (like
+            # cache_admit / cache_replicate): the agent can probe the
+            # re-warm/lazy verdict for a key without consuming a decision
+            registry.register(make_recovery_tool(self.recovery_policy,
+                                                 self.sketch))
         if self.replicator is not None:
             # replication as a callable cache op (like cache_admit): the
             # agent/controller can query the replicate/drop/hold verdict
@@ -956,6 +1464,7 @@ class ConcurrentEpisodeEngine:
         keeps the p95 win there (measured in ``table_prefetch``'s
         16-sessions/4-pods rows — see benchmarks/README.md)."""
         router, store, contention = self.router, self.store, self.contention
+        faults = self._faults
         prof = self.profile
         plan_tok = (PLAN_PROMPT_TOKENS_FS if prof.few_shot
                     else PLAN_PROMPT_TOKENS)[prof.prompting]
@@ -1021,6 +1530,11 @@ class ConcurrentEpisodeEngine:
                                         prefetched=True)
                 session.prefetched[k] = rec
                 session.stats.prefetch_issued += 1
+                if faults is not None:
+                    # if the pod dies before completion, the abort purges
+                    # this session's prefetched entry so the consume falls
+                    # through to a plain demand load (graceful bypass)
+                    faults.pf_owner[k] = session
                 events.push(completes, PRI_FINISH, payload=k)
                 # a later key cannot be consumed before this one lands
                 eta = max(eta, completes - now) + _gap(pod)
@@ -1035,21 +1549,48 @@ class ConcurrentEpisodeEngine:
         every task boundary (static policies return the same pod; the
         ``migrating`` policy drifts it across the episode)."""
         aff = self.affinity
+        faults = self._faults
         while True:
             task = s.next_task()
             if task is None:
                 return
             if aff is not None:
                 s.home_pod = self.pod_ids[aff.home(s.sid, s.cursor - 1)]
-            trace = yield from s.runner.iter_task(task)
+            if faults is None:
+                trace = yield from s.runner.iter_task(task)
+            else:
+                # per-task fault counters: retry adjustments land while
+                # the session is suspended mid-task, so the stat deltas
+                # across the task are exactly this task's share
+                st = s.stats
+                r0, w0 = st.retried_loads, st.retry_wait_s
+                to0, l0 = st.timeout_loads, st.lost_work_s
+                trace = yield from s.runner.iter_task(task)
+                trace.retried_loads = st.retried_loads - r0
+                trace.retry_wait_s = st.retry_wait_s - w0
+                trace.timeout_loads = st.timeout_loads - to0
+                trace.lost_work_s = st.lost_work_s - l0
+                faults.task_ends.append((s.clock.now(), trace.time_s))
             s.traces.append(trace)
 
     def run(self, tasks_per_session: int = 25,
             reuse_rate: float = 0.8) -> EpisodeResult:
         events = EventQueue()
+        # fault runtime: built per run (it owns event-queue handles); the
+        # plan's membership changes enter the heap at PRI_FAULT so they
+        # order exactly against same-instant completions and resumes
+        if self.fault_plan is not None or self.autoscaler is not None:
+            self._faults = FaultRuntime(self, events, self.retry_policy,
+                                        recovery=self.recovery_policy,
+                                        scaler=self.autoscaler,
+                                        **self.fault_kw)
+            for fev in (self.fault_plan or ()):
+                events.push(fev.at, PRI_FAULT, payload=fev)
         sessions = [self._make_session(sid, tasks_per_session, reuse_rate,
                                        events)
                     for sid in range(self.n_sessions)]
+        if self._faults is not None:
+            self._faults.sessions = sessions
         bodies = [self._session_body(s) for s in sessions]
         for s in sessions:
             events.push(0.0, PRI_SESSION, s.sid, s.sid)
@@ -1066,6 +1607,8 @@ class ConcurrentEpisodeEngine:
         in_flight = self.router.in_flight
         finish_load = self.router.finish_load
         replicator = self.replicator
+        faults = self._faults
+        scaler = self.autoscaler
         n_events = n_steps = 0
         while events:
             t, payload = pop()
@@ -1075,11 +1618,29 @@ class ConcurrentEpisodeEngine:
                 # before the first event at/after each boundary (background
                 # bookkeeping: no session clock is charged)
                 replicator.maybe_run(t)
-            if payload.__class__ is not int:
-                # pod-load completion: install into the owning pod's cache
-                # at exactly this instant (before any same-time session op)
-                if payload in in_flight:
-                    finish_load(payload)
+            if scaler is not None and t >= scaler.next_check:
+                # autoscaler polls on sim-time boundaries like replication
+                # epochs: fleet sizing is background control, no session
+                # clock is charged
+                faults.run_autoscaler(t)
+            cls = payload.__class__
+            if cls is not int:
+                if cls is str:
+                    # pod-load completion: install into the owning pod's
+                    # cache at exactly this instant (before any same-time
+                    # session op). An aborted load was already purged from
+                    # in_flight, so its completion event is inert.
+                    if payload in in_flight:
+                        finish_load(payload)
+                        if faults is not None:
+                            faults.note_finish(payload)
+                else:
+                    # membership change (FaultEvent) or retry (RetryEvent)
+                    faults.handle(t, payload)
+                continue
+            if faults is not None and t < faults.resume_at.get(payload, 0.0):
+                # stale resume: a retry pushed this session's wake-up to a
+                # later instant (only possible while faults are active)
                 continue
             body = bodies[payload]
             clock = sessions[payload].clock
@@ -1129,6 +1690,10 @@ class ConcurrentEpisodeEngine:
         n_tasks = int(lat.size)
         makespan = max((s.clock.now() for s in sessions), default=0.0)
         rstats = self.router.stats
+        fr = self._faults
+        recovery_s, unrecovered = fr.recovery_stats() if fr else (0.0, 0)
+        fo_p95, steady_p95 = fr.attributed_p95() if fr else (0.0, 0.0)
+        rec_pol = self.recovery_policy
         return EpisodeMetrics(
             n_sessions=self.n_sessions,
             n_pods=self.n_pods,
@@ -1187,6 +1752,31 @@ class ConcurrentEpisodeEngine:
                                    if self.locality else 0.0),
             locality_link_stall_s=(self.locality.stats.link_stall_s
                                    if self.locality else 0.0),
+            resilience_failovers=rstats.failovers,
+            resilience_restores=fr.restores if fr else 0,
+            resilience_scale_outs=rstats.scale_outs,
+            resilience_scale_ins=rstats.scale_ins,
+            resilience_aborted_loads=rstats.aborted_loads,
+            resilience_retried_loads=rstats.retried_loads,
+            resilience_timeout_loads=rstats.timeout_loads,
+            resilience_retry_wait_s=sum(s.stats.retry_wait_s
+                                        for s in sessions),
+            resilience_lost_work_s=fr.lost_work_s if fr else 0.0,
+            resilience_lost_keys=fr.lost_keys_n if fr else 0,
+            resilience_lost_replicas=fr.lost_replicas_n if fr else 0,
+            resilience_prefetch_aborted=fr.prefetch_aborted if fr else 0,
+            resilience_recovery_s=recovery_s,
+            resilience_unrecovered=unrecovered,
+            resilience_failover_p95_s=fo_p95,
+            resilience_steady_p95_s=steady_p95,
+            resilience_incomplete_sessions=sum(
+                1 for s in sessions if len(s.traces) < len(s.tasks)),
+            recovery_rewarms=fr.rewarms if fr else 0,
+            recovery_lazy=fr.lazy if fr else 0,
+            recovery_agreement=getattr(rec_pol, "agreement", 1.0),
+            recovery_tokens=(getattr(rec_pol, "prompt_tokens", 0)
+                             + getattr(rec_pol, "completion_tokens", 0)),
+            autoscale_actions=fr.autoscale_actions if fr else 0,
         )
 
 

@@ -65,6 +65,20 @@ class RoutingStats:
     replica_installs: int = 0
     replica_drops: int = 0
     replica_hits: int = 0
+    # fault/elasticity accounting (all zero without a FaultPlan):
+    # ``aborted_loads`` counts in-flight loads killed with their pod;
+    # ``retried_loads`` counts the physical re-issues the engine makes on
+    # behalf of aborted waiters (the physical-load invariant becomes
+    # remote_loads + prefetch_issued + retried_loads == total pod loads);
+    # ``timeout_loads`` counts waiters that exhausted their retry budget
+    # and bypassed to a direct DB read (never a stall-forever);
+    # ``scale_outs``/``scale_ins`` count elastic membership changes (a
+    # scale_in re-routes like a failure but is not a failover)
+    aborted_loads: int = 0
+    retried_loads: int = 0
+    timeout_loads: int = 0
+    scale_outs: int = 0
+    scale_ins: int = 0
 
 
 @dataclasses.dataclass
@@ -83,6 +97,23 @@ class InFlightLoad:
     credited: bool = False    # overlap credited (once per physical load)
     installed: bool = False   # completion installed it into the pod cache
     bypassed: bool = False    # completion was rejected by admission
+    aborted: bool = False     # the serving pod died before completes_at
+
+
+@dataclasses.dataclass
+class FailoverReport:
+    """What one membership change destroyed — computed *before* the pod
+    leaves service so the engine can abort/retry the affected sessions
+    with exact state. ``lost_keys`` are the residents of the dying pod's
+    cache (its working set, now cold); ``aborted`` are the in-flight loads
+    that died with it (each marked ``aborted=True`` and removed from the
+    router's in-flight table); ``lost_replicas`` are keys that lost a
+    replica copy hosted on the pod (they may still be resident at their
+    owner or on other replica pods)."""
+    pod: str
+    lost_keys: List[str]
+    aborted: List[InFlightLoad]
+    lost_replicas: List[str]
 
 
 class PodLocalCacheRouter:
@@ -95,6 +126,7 @@ class PodLocalCacheRouter:
                  sketch: Optional[FrequencySketch] = None):
         self._clock = clock
         self._policy_name = policy_name
+        self._capacity = capacity_per_pod   # default for scale_out pods
         # shared cross-session admission: one policy + one frequency sketch
         # for ALL pods (popularity is a property of the key, not the pod)
         self.admission = admission
@@ -142,23 +174,99 @@ class PodLocalCacheRouter:
         self.locality = None
 
     # -- membership ----------------------------------------------------------
-    def fail_pod(self, pod_id: str):
+    def _purge_pod(self, pod_id: str) -> FailoverReport:
+        """Everything a pod's departure invalidates, computed before it
+        leaves service: abort its in-flight loads (they can never
+        ``finish_load`` — a dangling record would block the key's next
+        demand load forever), un-count their demand-feed contribution (the
+        load never completed; the replicator must not promote on it — the
+        engine's retry re-counts when it re-issues), drop its replica
+        copies, and purge the ``replica_reads`` demotion feed for keys
+        left with no replicas at all."""
+        aborted = [rec for rec in self.in_flight.values()
+                   if rec.pod == pod_id]
+        for rec in aborted:
+            del self.in_flight[rec.key]
+            rec.aborted = True
+            self.stats.aborted_loads += 1
+            if not rec.prefetched and rec.key in self.demand_counts:
+                self.demand_counts[rec.key] -= 1
+                if self.demand_counts[rec.key] <= 0:
+                    del self.demand_counts[rec.key]
+        lost_replicas = []
+        for key in list(self.replicas):
+            pods = self.replicas[key]
+            if pod_id in pods:
+                pods.remove(pod_id)
+                lost_replicas.append(key)
+            if not pods:
+                del self.replicas[key]
+                self.replica_reads.pop(key, None)
+        self._owner_memo.clear()
+        return FailoverReport(pod=pod_id,
+                              lost_keys=sorted(self.pods[pod_id].keys()),
+                              aborted=aborted,
+                              lost_replicas=sorted(lost_replicas))
+
+    def fail_pod(self, pod_id: str) -> Optional[FailoverReport]:
         """Simulated pod failure: its cache contents are lost; its key range
         re-routes deterministically to survivors (rendezvous property). The
         rebuilt cache keeps the router's clock so the restored pod stays on
-        simulated time (recency metadata stays comparable across pods)."""
+        simulated time (recency metadata stays comparable across pods).
+
+        Idempotent: failing an already-dead pod is a no-op returning
+        ``None`` (no failover counted, nothing purged twice). Otherwise
+        returns the :class:`FailoverReport` of what died with the pod."""
+        if not self.alive.get(pod_id, False):
+            return None
+        report = self._purge_pod(pod_id)
         self.alive[pod_id] = False
         self.pods[pod_id] = DataCache(self.pods[pod_id].capacity, self._clock)
         self.policies[pod_id] = make_policy(self._policy_name)
         self.stats.failovers += 1
-        self._owner_memo.clear()
-        for pods in self.replicas.values():       # copies died with the pod
-            if pod_id in pods:
-                pods.remove(pod_id)
+        return report
 
-    def restore_pod(self, pod_id: str):
+    def restore_pod(self, pod_id: str) -> bool:
+        """Return a failed pod to service (cold — its contents died with
+        it). Idempotent: restoring a live pod is a no-op returning False."""
+        if self.alive.get(pod_id, False):
+            return False
+        assert pod_id in self.pods, f"unknown pod {pod_id}"
         self.alive[pod_id] = True
         self._owner_memo.clear()
+        return True
+
+    def scale_out(self, pod_id: str,
+                  capacity: Optional[int] = None) -> None:
+        """Elastic fleet growth: add a brand-new (cold, empty) pod. The
+        rendezvous property means only the keys it now wins re-route onto
+        it; everything else keeps its owner and its warm cache."""
+        assert pod_id not in self.pods, f"pod {pod_id} already exists"
+        self.pods[pod_id] = DataCache(capacity or self._capacity, self._clock)
+        self.policies[pod_id] = make_policy(self._policy_name)
+        self.alive[pod_id] = True
+        self._owner_memo.clear()
+        self.stats.scale_outs += 1
+
+    def scale_in(self, pod_id: str) -> Optional[FailoverReport]:
+        """Elastic fleet shrink: retire a pod entirely. Its keys re-route
+        like a failure (same purge/abort semantics, same
+        :class:`FailoverReport`) but it is accounted as a scale event, not
+        a failover. No-op returning ``None`` for an unknown pod; refuses
+        to retire the last live pod."""
+        if pod_id not in self.pods:
+            return None
+        live = self.live_pods()
+        assert not (live == [pod_id]), "cannot scale in the last live pod"
+        report = (self._purge_pod(pod_id) if self.alive.get(pod_id, False)
+                  else FailoverReport(pod=pod_id, lost_keys=[], aborted=[],
+                                      lost_replicas=[]))
+        del self.pods[pod_id]
+        del self.policies[pod_id]
+        del self.alive[pod_id]
+        self._owner_memo.clear()
+        self.stats.scale_ins += 1
+        return report
 
     def live_pods(self) -> List[str]:
         return [p for p, ok in self.alive.items() if ok]

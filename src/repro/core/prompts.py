@@ -187,6 +187,48 @@ def replication_decision_prompt(policy_text: str, key: str, freq: int,
     return "".join(parts)
 
 
+RECOVERY_FEWSHOT = """Example 1:
+Recovery policy: threshold (re-warm NOW when the key's estimated frequency is >= 4; otherwise refill lazily on the next demand access).
+Lost key: xview1-2022 (estimated frequency: 9)
+Thought: the key is clearly hot — every consumer would pay the failover DB load; one background re-warm onto the new owner pays it once.
+Answer: {"decision": "rewarm"}
+
+Example 2:
+Recovery policy: threshold (re-warm NOW when the key's estimated frequency is >= 4; otherwise refill lazily on the next demand access).
+Lost key: naip-2018 (estimated frequency: 1)
+Thought: a near-cold key may never be read again — a background load for it would only waste the new owner's bandwidth.
+Answer: {"decision": "lazy"}
+"""
+
+
+def recovery_decision_prompt(policy_text: str, key: str, freq: int,
+                             rewarm_min: int, top_json: str,
+                             few_shot: bool) -> str:
+    """Prompt for the GPT-driven post-failover recovery decision: a pod
+    just died and ``key`` was resident in its cache (now lost; its key
+    range re-routed to a new owner pod). Decide REWARM (issue a background
+    DB load onto the new owner now, so consumers find it warm) or LAZY
+    (let the next demand access pay the load)."""
+    parts = [SYSTEM_HEADER,
+             "You are now the cache RECOVERY controller of a pod-sharded "
+             "deployment. A pod just FAILED: its cached keys are lost and "
+             "their key ranges re-routed to the surviving pods. For ONE "
+             "lost key, decide whether to RE-WARM it now (issue one "
+             "background database load onto its new owner pod) or refill "
+             "it LAZILY (the next session that needs it pays the database "
+             "load on demand). Apply the recovery policy below.\n",
+             f"Recovery policy: {policy_text}\n"]
+    if few_shot:
+        parts.append(RECOVERY_FEWSHOT)
+    parts.append(f"Hottest keys right now (frequency sketch): {top_json}\n")
+    parts.append(f"Lost key: {key} (estimated frequency: {freq})\n")
+    parts.append(f"Threshold: re-warm at >= {rewarm_min}; otherwise lazy.\n")
+    parts.append('Respond with a JSON object: {"decision": "rewarm"} or '
+                 '{"decision": "lazy"}.\n')
+    parts.append("Answer (JSON): ")
+    return "".join(parts)
+
+
 def parse_json_tail(text: str):
     """Parse the trailing JSON object/list from an LLM completion."""
     text = text.strip()

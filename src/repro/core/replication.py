@@ -214,7 +214,8 @@ class HotKeyReplicator:
                  policy: Optional[ReplicationPolicy] = None,
                  top_k: int = 8, max_replicated: int = 4,
                  epoch_s: float = 60.0, fanout: Optional[int] = 1,
-                 miss_min: int = 2, gain_ratio: float = 2.0):
+                 miss_min: int = 2, gain_ratio: float = 2.0,
+                 durability: bool = False):
         assert epoch_s > 0
         self.router = router
         self.sketch = sketch
@@ -226,6 +227,7 @@ class HotKeyReplicator:
         self.fanout = fanout              # copies per key (None = every pod)
         self.miss_min = miss_min          # demand loads/epoch to qualify
         self.gain_ratio = gain_ratio      # key must beat the victim by this
+        self.durability = durability      # also judge hot RESIDENT keys
         self.next_epoch = epoch_s
         self.replicated: Dict[str, int] = {}     # key -> promote epoch index
         self.stats = ReplicationStats()
@@ -392,6 +394,36 @@ class HotKeyReplicator:
             st.copies_installed += copies
             st.replica_bytes += copies * size
         missed_clear()
+        # durability pass (opt-in; off by default and bit-identical to the
+        # miss-fed replicator when off): the miss feed structurally never
+        # promotes a key the owner retains — it never misses — yet exactly
+        # those hot residents are what a pod failure destroys. Judging the
+        # sketch's global top-k too places copies that buy no latency
+        # (reads resolve owner-first at equal cost) but let the hottest
+        # keys SURVIVE owner loss: replication doubling as resilience
+        # (table_resilience measures the recovery-time delta). Runs after
+        # the miss feed — homeless keys have latency value on top of the
+        # durability value, so they get the replica slots first.
+        if self.durability:
+            for key, _est in self.sketch.top_k(self.top_k):
+                if key in self.replicated:
+                    continue
+                if len(self.replicated) >= self.max_replicated:
+                    break
+                freq = self.sketch.estimate(key)
+                if self.policy.decide(key, freq, False) != "replicate":
+                    st.holds += 1
+                    continue
+                value = self.value_of(key)
+                size = getattr(value, "size_bytes", 0)
+                copies = self.router.replicate(key, value, size, self.fanout,
+                                               self.gain_ratio)
+                if not copies:
+                    continue          # every host vetoed (hotter residents)
+                self.replicated[key] = st.epochs
+                st.promotes += 1
+                st.copies_installed += copies
+                st.replica_bytes += copies * size
 
     # -- reporting ------------------------------------------------------------
     @property

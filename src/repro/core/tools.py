@@ -173,6 +173,40 @@ def make_replication_tool(replicator) -> ToolSpec:
         fn=cache_replicate)
 
 
+def make_recovery_tool(recovery, sketch) -> ToolSpec:
+    """Post-failover recovery as a callable cache op: ``cache_recover(key)``
+    answers whether the recovery policy would RE-WARM the key now (one
+    background DB load onto its new rendezvous owner) or refill it LAZILY
+    on the next demand access — with the evidence (sketch estimate,
+    re-warm threshold) the decision is based on.
+
+    Exposed in the same function-calling schema as ``read_cache`` /
+    ``load_db`` / ``cache_admit`` / ``cache_replicate`` (the paper's
+    cache-ops-as-tools design extended to failover handling). Querying is
+    side-effect-free: actual re-warms happen in the fault runtime's
+    failover handler, and the sketch is read without interning. The
+    verdict is always the programmatic base rule — a diagnostic probe
+    must not consume LLM tokens or grading samples."""
+
+    def cache_recover(key: str):
+        base = getattr(recovery, "base", recovery)   # LLM wrapper: the rule
+        freq = (int(sketch.estimate_peek(key)) if sketch is not None else 0)
+        return {"key": key, "decision": base.decide(key, freq),
+                "key_freq": freq, "rewarm_min": base.rewarm_min,
+                "reason": recovery.name}
+
+    return ToolSpec(
+        name="cache_recover",
+        description=("Ask the failover RECOVERY policy whether a "
+                     "`dataset-year` key lost in a pod failure should be "
+                     "re-warmed now (one background database load onto its "
+                     "new owner pod) or refilled lazily by the next demand "
+                     "access."),
+        parameters={"key": {"type": "string",
+                            "description": "dataset-year, e.g. xview1-2022"}},
+        fn=cache_recover)
+
+
 class ToolRegistry:
     """Function-calling registry: schemas for the prompt, dispatch at runtime."""
 

@@ -13,15 +13,24 @@ import pathlib
 import sys
 
 HERE = pathlib.Path(__file__).resolve().parent
-spec = importlib.util.spec_from_file_location(
-    "test_locality", HERE.parent / "test_locality.py")
-mod = importlib.util.module_from_spec(spec)
-sys.modules["test_locality"] = mod
-spec.loader.exec_module(mod)
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        name, HERE.parent / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+loc = _load("test_locality")
+flt = _load("test_faults")
 
 for name, builder in (
-        ("admission_locality", mod._build_admission_transcript),
-        ("replication_locality", mod._build_replication_transcript)):
+        ("admission_locality", loc._build_admission_transcript),
+        ("replication_locality", loc._build_replication_transcript),
+        ("recovery", flt._build_recovery_transcript)):
     path = HERE / f"{name}.json"
     transcript = builder()
     path.write_text(json.dumps(transcript, indent=2, sort_keys=True) + "\n")

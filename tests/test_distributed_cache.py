@@ -78,3 +78,73 @@ def test_summary_shape():
     r.fetch("a-2020", LOADER, SIZE)
     s = r.summary()
     assert set(s) >= {"pods", "routed", "local_hit_rate", "failovers"}
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 6: failover purge semantics + idempotency + elastic membership
+# ---------------------------------------------------------------------------
+
+def test_fail_pod_idempotent_and_reports():
+    r = mk(3)
+    r.fetch("a-2020", LOADER, SIZE)
+    dead = r.owner("a-2020")
+    report = r.fail_pod(dead)
+    assert report is not None and report.pod == dead
+    assert report.lost_keys == ["a-2020"]
+    assert r.fail_pod(dead) is None          # already down: no-op
+    assert r.stats.failovers == 1            # not double-counted
+    assert r.restore_pod(dead) is True
+    assert r.restore_pod(dead) is False      # already live: no-op
+
+
+def test_fail_pod_purges_in_flight_and_demand_feed():
+    """Regression: a dying pod's in-flight loads must abort (a dangling
+    record would block the key's next demand load forever) and their
+    demand-feed contribution must be un-counted (the load never
+    completed; the replicator must not promote on it)."""
+    r = mk(3)
+    r.spill = object()                       # arm the demand feed
+    key = "ds0-2020"
+    pod = r.owner(key)
+    rec = r.start_load(key, "v", 1, issued_at=0.0, completes_at=5.0)
+    assert r.demand_counts == {key: 1}
+    other = next(f"x{i}-2020" for i in range(99)
+                 if r.owner(f"x{i}-2020") != pod)
+    r.start_load(other, "v", 1, issued_at=0.0, completes_at=5.0)
+    report = r.fail_pod(pod)
+    assert rec.aborted and [a.key for a in report.aborted] == [key]
+    assert key not in r.in_flight            # purged
+    assert other in r.in_flight              # survivor untouched
+    assert key not in r.demand_counts        # un-counted
+    assert r.stats.aborted_loads == 1
+
+
+def test_fail_pod_purges_replicas_and_read_feed():
+    r = mk(4)
+    key = "ds1-2021"
+    hosts = [p for p in r.pods if p != r.owner(key)][:2]
+    for h in hosts:
+        r.pods[h].put(key, "v", 1)
+    r.replicas[key] = list(hosts)
+    r.replica_reads[key] = 3
+    report = r.fail_pod(hosts[0])
+    assert report.lost_replicas == [key]
+    assert r.replicas[key] == [hosts[1]]     # surviving copy kept
+    assert key in r.replica_reads            # still has a copy: feed kept
+    r.fail_pod(hosts[1])
+    assert key not in r.replicas             # last copy gone
+    assert key not in r.replica_reads        # demotion feed purged with it
+
+
+def test_scale_out_and_in():
+    r = mk(2)
+    r.scale_out("pod9")
+    assert "pod9" in r.live_pods() and r.stats.scale_outs == 1
+    keys = [f"k{i}-2020" for i in range(30)]
+    gained = [k for k in keys if r.owner(k) == "pod9"]
+    assert gained                            # rendezvous: pod9 wins some
+    report = r.scale_in("pod9")
+    assert report is not None and r.stats.scale_ins == 1
+    assert "pod9" not in r.pods
+    assert all(r.owner(k) != "pod9" for k in keys)
+    assert r.scale_in("pod9") is None        # unknown pod: no-op
