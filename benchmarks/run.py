@@ -111,6 +111,9 @@ def main() -> None:
                 "Fault-injected elastic fleet (failover + recovery)",
                 tables.table_resilience, tasks_per_session=conc_tasks,
                 parallel=par)
+        section("capacity",
+                "Open-loop capacity sweep (Poisson arrivals, SLO knee)",
+                tables.table_capacity, parallel=par)
     section("belady", "Beyond-paper: Belady oracle bound",
             tables.belady_bound, n=n23)
 
@@ -172,8 +175,24 @@ def main() -> None:
             return round(sum(vals) / len(vals), 3) if vals else None
         res_llm = next((c for c in res_rows if c[5] == "rec-llm"), None)
         res_auto = next((c for c in res_rows if c[4] == "autoscale"), None)
+        cap_all = [r.split(",") for r in by_id.get("capacity", [])]
+        cap_rows = [c for c in cap_all if c[0] == "capacity"]
+        cap_knee = {c[2]: (float(c[3]) if c[3] else None)
+                    for c in cap_all if c[0] == "capacity_knee"}
+
+        def _cap_monotone_ok():
+            """1 when every config's SLO attainment is non-increasing in
+            the offered rate (rows are emitted in sweep order)."""
+            if not cap_rows:
+                return None
+            by_cfg = {}
+            for c in cap_rows:
+                by_cfg.setdefault(c[2], []).append(float(c[12]))
+            return int(all(
+                all(f[i] >= f[i + 1] - 1e-12 for i in range(len(f) - 1))
+                for f in by_cfg.values()))
         record = {
-            "schema": "bench_dcache/v5",
+            "schema": "bench_dcache/v6",
             "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "platform": {"python": platform.python_version(),
                          "machine": platform.machine()},
@@ -275,6 +294,27 @@ def main() -> None:
                                                  if res_llm else None),
                 "resilience_autoscale_actions": (int(res_auto[31])
                                                  if res_auto else None),
+                # open-loop capacity sweep (ISSUE 7): max sustainable
+                # Poisson arrival rate per config under the p99 SLO. The
+                # headline is the tinylfu:base knee ratio — admission is
+                # a CAPACITY feature under offered load
+                "capacity_slo_p99_s": (float(cap_rows[0][4])
+                                       if cap_rows else None),
+                "capacity_knee_base_sps": cap_knee.get("base"),
+                "capacity_knee_tinylfu_sps": cap_knee.get("tinylfu"),
+                "capacity_knee_repl_sps": cap_knee.get("repl"),
+                "capacity_knee_sticky2x_sps": cap_knee.get("sticky2x"),
+                # queueing locks aggregated over every swept cell: flow
+                # imbalance (spawned - completed - in_system, must be 0),
+                # unfinished sessions (must be 0), and SLO-attainment
+                # monotonicity per config (must be 1)
+                "capacity_flow_imbalance_total": (
+                    sum(int(c[5]) - int(c[6]) - int(c[7])
+                        for c in cap_rows) if cap_rows else None),
+                "capacity_incomplete_total": (
+                    sum(int(c[17]) for c in cap_rows)
+                    if cap_rows else None),
+                "capacity_slo_monotone_ok": _cap_monotone_ok(),
             },
         }
         if args.profile:

@@ -146,7 +146,8 @@ def table_concurrency(tasks_per_session: int = 25,
                       n_pods: int = 4,
                       scale: Sequence[Sequence[int]] = ((128, 16),
                                                        (256, 32)),
-                      parallel: bool = False) -> List[str]:
+                      parallel: bool = False,
+                      engine_kw: Dict = None) -> List[str]:
     """Beyond-paper: N concurrent sessions contending on the pod-sharded
     cache (the paper's "hundreds of GPT endpoints" regime). Latency
     percentiles are per-task simulated seconds; stalls are time spent
@@ -165,8 +166,11 @@ def table_concurrency(tasks_per_session: int = 25,
             "total_loads,local_hit_pct,pod_imbalance,miss_replans"]
     configs = ([(ns, n_pods, tasks_per_session) for ns in sessions]
                + [(c[0], c[1], min(10, tasks_per_session)) for c in scale])
+    # engine_kw threads extra engine kwargs into every cell — the
+    # degeneracy digest tests replay this table under traffic="closed"
+    ekw = dict(engine_kw or {})
     cells = [lambda ns=ns, npod=npod, tps=tps: run_episode(
-                 ns, tps, n_pods=npod, seed=0)
+                 ns, tps, n_pods=npod, seed=0, **ekw)
              for ns, npod, tps in configs]
     for res in _run_cells(cells, parallel):
         m = res.metrics
@@ -485,7 +489,8 @@ def table_locality(tasks_per_session: int = 25,
 
 
 def table_resilience(tasks_per_session: int = 20,
-                     parallel: bool = False) -> List[str]:
+                     parallel: bool = False,
+                     engine_kw: Dict = None) -> List[str]:
     """Beyond-paper: fault-injected elastic fleet (ISSUE 6).
 
     Workload: the replication table's globally-aligned zipf skew at
@@ -566,9 +571,11 @@ def table_resilience(tasks_per_session: int = 20,
                  {"fault_plan": single, "recovery_impl": "python"}))
     grid.append(("single", "rec-llm", 1,
                  {"fault_plan": single, "recovery_impl": "llm"}))
+    ekw = dict(engine_kw or {})   # degeneracy replays: traffic="closed"
     cells = [lambda seed=seed, kw=kw: run_episode(
                  16, tasks_per_session, n_pods=4, reuse_rate=0.3, seed=seed,
-                 prefetch=True, capacity_per_pod=8, **dict(zipfg, **kw))
+                 prefetch=True, capacity_per_pod=8,
+                 **dict(zipfg, **dict(kw, **ekw)))
              for _f, _c, seed, kw in grid]
     results = _run_cells(cells, parallel)
     for (fault, config, seed, _kw), res in zip(grid, results):
@@ -590,6 +597,92 @@ def table_resilience(tasks_per_session: int = 20,
             f"{m.recovery_rewarms},{m.recovery_lazy},"
             f"{100 * m.recovery_agreement:.2f},{m.recovery_tokens},"
             f"{m.autoscale_actions},{m.resilience_incomplete_sessions}")
+    return rows
+
+
+def table_capacity(rates: Sequence[float] = (0.1, 0.2, 0.4, 0.8),
+                   horizon_s: float = 150.0, slo_p99_s: float = 10.0,
+                   lifetime_tasks: int = 6, n_pods: int = 4,
+                   parallel: bool = False) -> List[str]:
+    """Beyond-paper: open-loop capacity sweep (ISSUE 7).
+
+    The closed-loop tables measure a FIXED population racing to drain its
+    task streams; this table measures *offered load*: Poisson session
+    arrivals at ``rate_sps`` sessions/s over ``horizon_s``, each session a
+    bounded ``lifetime_tasks``-task visit (spawn and retire are
+    first-class scheduler events — see repro/core/traffic.py). Workload is
+    the resilience table's globally-aligned zipf skew (every session
+    agrees on the hot set, so cache state carries between visits — an
+    open-loop system with no key reuse across sessions has no cache story
+    to measure).
+
+    Config axis — (admission, replication, affinity), the same levers as
+    the closed-loop tables: ``base`` (install-everything), ``tinylfu``
+    (shared-sketch admission), ``repl`` (hot-key replication), and
+    ``sticky2x`` (sticky session->pod affinity at a 2x cross-pod read
+    penalty). For each config the sweep reports goodput (completed
+    tasks/s over the makespan), the latency tail (p50/p95/p99), and
+    SLO attainment (fraction of tasks under ``slo_p99_s``); the final
+    ``capacity_knee`` row per config is the **max sustainable arrival
+    rate**: the largest swept rate whose p99 still meets the SLO.
+    Headline (seed 1, defaults): TinyLFU admission sustains 2x the
+    arrival rate of install-everything (knee 0.8/s vs 0.4/s) — under
+    offered load, keeping one-shot tail keys out of the cache is a
+    *capacity* feature, not just a latency one.
+
+    Row invariants (locked by tests/test_traffic.py on every cell):
+    flow balance ``spawned == completed + in_system`` with
+    ``in_system == 0`` at episode end, ``incomplete == 0`` (the PR-6
+    zero-stall-forever gate carried over), a Little's-law residual
+    |L - lambda*W| at float precision, and ``slo_frac`` monotone
+    non-increasing in the offered rate per config."""
+    from repro.core.traffic import PoissonTraffic, find_knee, slo_attainment
+
+    if slo_p99_s <= 0.0:
+        raise ValueError(f"slo_p99_s must be > 0, got {slo_p99_s}")
+    rows = ["table,scenario,config,rate_sps,slo_s,spawned,completed,"
+            "in_system,goodput_tps,p50_s,p95_s,p99_s,slo_frac,"
+            "mean_sojourn_s,mean_in_system,little_resid,local_hit_pct,"
+            "incomplete"]
+    zipfg = {"scenario": "zipf",
+             "scenario_kw": {"zipf_a": 1.1, "zipf_global": True}}
+    rkw = {"epoch_s": 20.0, "max_replicated": 8, "promote_min": 4,
+           "miss_min": 2, "gain_ratio": 2.0}
+    configs = (
+        ("base", {}),
+        ("tinylfu", {"admission": "tinylfu"}),
+        ("repl", {"replication": True, "replication_kw": rkw}),
+        ("sticky2x", {"affinity": "sticky", "remote_read_penalty": 2.0}),
+    )
+    grid = [(name, kw, rate) for name, kw in configs for rate in rates]
+    cells = [lambda kw=kw, rate=rate: run_episode(
+                 1, 25, n_pods=n_pods, reuse_rate=0.3, seed=1,
+                 prefetch=True, capacity_per_pod=8,
+                 traffic=PoissonTraffic(rate, horizon_s, seed=1,
+                                        lifetime_tasks=lifetime_tasks),
+                 **dict(zipfg, **kw))
+             for _n, kw, rate in grid]
+    results = _run_cells(cells, parallel)
+    knees: Dict[str, List[tuple]] = {}
+    for (name, _kw, rate), res in zip(grid, results):
+        m = res.metrics
+        lats = [tr.time_s for s in res.sessions for tr in s.traces]
+        frac = slo_attainment(lats, slo_p99_s)
+        knees.setdefault(name, []).append((rate, m.p99_task_latency_s))
+        rows.append(
+            f"capacity,zipfg-1.1,{name},{rate},{slo_p99_s},"
+            f"{m.traffic_spawned},{m.traffic_completed},"
+            f"{m.traffic_in_system},{m.throughput_tasks_per_s:.4f},"
+            f"{m.p50_task_latency_s:.3f},{m.p95_task_latency_s:.3f},"
+            f"{m.p99_task_latency_s:.3f},{frac:.4f},"
+            f"{m.traffic_mean_sojourn_s:.3f},"
+            f"{m.traffic_mean_in_system:.3f},"
+            f"{m.traffic_little_residual:.2e},{100*m.local_hit_rate:.2f},"
+            f"{m.resilience_incomplete_sessions}")
+    for name, pts in knees.items():
+        knee = find_knee(pts, slo_p99_s)
+        rows.append(f"capacity_knee,zipfg-1.1,{name},"
+                    f"{knee if knee is not None else ''},{slo_p99_s}")
     return rows
 
 

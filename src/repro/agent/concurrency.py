@@ -115,6 +115,7 @@ from repro.core.faults import (
 )
 from repro.core.locality import LocalityModel, make_affinity
 from repro.core.replication import HotKeyReplicator, make_replication
+from repro.core.traffic import ArrivalProcess, TrafficStats, make_traffic
 from repro.core.tools import (
     ToolRegistry,
     ToolSpec,
@@ -712,6 +713,33 @@ class RetryEvent:
         self.attempt = attempt
 
 
+class TrafficSpawn:
+    """Open-loop session arrival (ISSUE 7): pops at the arrival instant
+    with ``PRI_SESSION`` and the session id as tiebreak — so the
+    degenerate all-at-t=0 schedule pops in exactly the order the
+    closed-loop engine pushed its resume events. The handler constructs
+    the session lazily (construction touches no shared mutable state),
+    advances its clock to the arrival time, and steps it inline."""
+
+    __slots__ = ("sid", "lifetime_tasks")
+
+    def __init__(self, sid: int, lifetime_tasks: Optional[int]):
+        self.sid = sid
+        self.lifetime_tasks = lifetime_tasks
+
+
+class TrafficRetire:
+    """Open-loop session departure: pushed at the instant a session's
+    generator exhausts its (bounded) task stream. Pure ledger — the
+    handler records the retire time for flow-balance / Little's-law
+    accounting and touches no clock or shared state."""
+
+    __slots__ = ("sid",)
+
+    def __init__(self, sid: int):
+        self.sid = sid
+
+
 class FaultRuntime:
     """Engine-side semantics of a :class:`~repro.core.faults.FaultPlan`.
 
@@ -972,13 +1000,31 @@ class FaultRuntime:
             self.rewarms += 1
 
     # -- autoscaling ---------------------------------------------------------
+    def predicted_rewarm_s(self) -> float:
+        """Predicted warm-up cost of the pod a scale_out would add: the
+        rendezvous reshuffle re-homes ~1/(n_live+1) of the resident keys,
+        and each re-homed key re-warms through one demand DB load at the
+        fleet's observed service EWMA. This is the cost the warm-up-aware
+        autoscaler weighs against the surge's observed persistence."""
+        live = self.router.live_pods()
+        if not live:
+            return 0.0
+        resident = sum(len(self.router.pods[p]) for p in live)
+        if resident == 0:
+            return 0.0
+        moved = resident / (len(live) + 1.0)
+        svc = max(self.contention.expected_service_s(p, 0.0) for p in live)
+        return moved * svc
+
     def run_autoscaler(self, t: float) -> None:
         sc = self.scaler
         while t >= sc.next_check:
             now = sc.next_check
             backlogs = {p: self.contention.backlog_s(p, now)
                         for p in self.router.live_pods()}
-            action = sc.decide(now, backlogs)
+            rewarm = (self.predicted_rewarm_s()
+                      if sc.warmup_aware else 0.0)
+            action = sc.decide(now, backlogs, rewarm_cost_s=rewarm)
             if action == SCALE_OUT:
                 pod = self._new_pod()
                 self.router.scale_out(pod)
@@ -1123,6 +1169,23 @@ class EpisodeMetrics:
     recovery_agreement: float = 1.0
     recovery_tokens: int = 0
     autoscale_actions: int = 0
+    # scale_outs the warm-up-aware autoscaler gate deferred (0 unless
+    # ``autoscale_kw={"warmup_aware": True, ...}``)
+    autoscale_deferred: int = 0
+    # open-loop traffic accounting (ISSUE 7; all zero without an arrival
+    # process). p99 joins p50/p95 because the capacity harness's SLO is a
+    # tail target. Flow balance (spawned == completed + in_system) and the
+    # Little's-law residual |L - lambda*W| are the queueing locks
+    # tests/test_traffic.py asserts on every capacity cell.
+    p99_task_latency_s: float = 0.0
+    traffic_spawned: int = 0
+    traffic_completed: int = 0
+    traffic_in_system: int = 0
+    traffic_offered_rate: float = 0.0
+    traffic_measured_rate: float = 0.0
+    traffic_mean_sojourn_s: float = 0.0
+    traffic_mean_in_system: float = 0.0
+    traffic_little_residual: float = 0.0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -1182,8 +1245,23 @@ class ConcurrentEpisodeEngine:
                  recovery_kw: Optional[Dict] = None,
                  autoscale: bool = False,
                  autoscale_kw: Optional[Dict] = None,
-                 fault_kw: Optional[Dict] = None):
+                 fault_kw: Optional[Dict] = None,
+                 traffic=None):
         assert n_sessions >= 1 and n_pods >= 1
+        if capacity_per_pod < 1:
+            raise ValueError(
+                f"capacity_per_pod must be >= 1, got {capacity_per_pod}")
+        # open-loop traffic (ISSUE 7): an ArrivalProcess (or the string
+        # "closed" for the degenerate all-at-t=0 schedule) turns sessions
+        # into first-class spawn/retire events. A real arrival process
+        # OVERRIDES n_sessions with its schedule length; "closed" keeps
+        # the given count. ``traffic=None`` (default) is the closed-loop
+        # engine, bit-identical to PR 6.
+        self.traffic = None
+        self.tstats = None
+        if traffic is not None:
+            self.traffic = make_traffic(traffic, n_sessions)
+            n_sessions = len(self.traffic.schedule())
         self.n_sessions = n_sessions
         self.n_pods = n_pods
         self.profile = Profile(model, prompting, few_shot)
@@ -1211,6 +1289,13 @@ class ConcurrentEpisodeEngine:
         self.affinity = None
         self.locality = None
         if affinity is not None:
+            if remote_read_penalty < 1.0:
+                # a sub-1x penalty would CREDIT remote reads (negative
+                # clock advances) — fail loudly, not as a deep scheduler
+                # assert minutes into an episode
+                raise ValueError(
+                    f"remote_read_penalty must be >= 1.0, got "
+                    f"{remote_read_penalty}")
             self.affinity = make_affinity(affinity, n_pods=n_pods,
                                           **(affinity_kw or {}))
             self.locality = LocalityModel(self.latency,
@@ -1575,6 +1660,12 @@ class ConcurrentEpisodeEngine:
 
     def run(self, tasks_per_session: int = 25,
             reuse_rate: float = 0.8) -> EpisodeResult:
+        if tasks_per_session < 1:
+            raise ValueError(
+                f"tasks_per_session must be >= 1, got {tasks_per_session}")
+        if not 0.0 <= reuse_rate <= 1.0:
+            raise ValueError(
+                f"reuse_rate must be in [0, 1], got {reuse_rate}")
         events = EventQueue()
         # fault runtime: built per run (it owns event-queue handles); the
         # plan's membership changes enter the heap at PRI_FAULT so they
@@ -1586,14 +1677,30 @@ class ConcurrentEpisodeEngine:
                                         **self.fault_kw)
             for fev in (self.fault_plan or ()):
                 events.push(fev.at, PRI_FAULT, payload=fev)
-        sessions = [self._make_session(sid, tasks_per_session, reuse_rate,
-                                       events)
-                    for sid in range(self.n_sessions)]
+        tstats = None
+        if self.traffic is None:
+            sessions = [self._make_session(sid, tasks_per_session,
+                                           reuse_rate, events)
+                        for sid in range(self.n_sessions)]
+            bodies = [self._session_body(s) for s in sessions]
+            for s in sessions:
+                events.push(0.0, PRI_SESSION, s.sid, s.sid)
+        else:
+            # open-loop (ISSUE 7): sessions are first-class spawn events.
+            # A spawn pops at (arrival, PRI_SESSION, sid) — for the
+            # degenerate all-at-t=0 schedule that is exactly the order
+            # the closed-loop push loop above produces, and the handler
+            # constructs + steps the session inline, so the replay is
+            # bit-identical (the degeneracy contract).
+            arrivals = self.traffic.schedule()
+            tstats = self.tstats = TrafficStats(self.traffic.offered_rate)
+            sessions = [None] * len(arrivals)
+            bodies = [None] * len(arrivals)
+            for sid, arr in enumerate(arrivals):
+                events.push(arr.at, PRI_SESSION, sid,
+                            TrafficSpawn(sid, arr.lifetime_tasks))
         if self._faults is not None:
             self._faults.sessions = sessions
-        bodies = [self._session_body(s) for s in sessions]
-        for s in sessions:
-            events.push(0.0, PRI_SESSION, s.sid, s.sid)
         # Hot loop (ISSUE 4): payloads are an int session id or a str
         # in-flight key (no wrapper tuples), popped without Event
         # allocation. Zero-length clock advances are COALESCED: while the
@@ -1634,10 +1741,31 @@ class ConcurrentEpisodeEngine:
                         finish_load(payload)
                         if faults is not None:
                             faults.note_finish(payload)
+                    continue
+                if cls is TrafficSpawn:
+                    # session arrival: construct lazily (construction
+                    # touches no shared mutable state — task memo and LLM
+                    # streams are pure functions of the sid), advance its
+                    # clock to the arrival instant, then FALL THROUGH to
+                    # step it exactly like a resume event
+                    sid = payload.sid
+                    n_tasks = (payload.lifetime_tasks
+                               if payload.lifetime_tasks is not None
+                               else tasks_per_session)
+                    s = self._make_session(sid, n_tasks, reuse_rate, events)
+                    s.clock.advance_to(t)
+                    sessions[sid] = s
+                    bodies[sid] = self._session_body(s)
+                    tstats.note_spawn(t, sid)
+                    payload = sid
+                elif cls is TrafficRetire:
+                    # session departure: pure ledger, no clock moves
+                    tstats.note_retire(t, payload.sid)
+                    continue
                 else:
                     # membership change (FaultEvent) or retry (RetryEvent)
                     faults.handle(t, payload)
-                continue
+                    continue
             if faults is not None and t < faults.resume_at.get(payload, 0.0):
                 # stale resume: a retry pushed this session's wake-up to a
                 # later instant (only possible while faults are active)
@@ -1652,6 +1780,11 @@ class ConcurrentEpisodeEngine:
                     next(body)
                     n_steps += 1
             except StopIteration:
+                if tstats is not None:
+                    # retire as a first-class event at the completion
+                    # instant of the session's last task
+                    events.push(clock.now(), PRI_SESSION, payload,
+                                TrafficRetire(payload))
                 continue
             events.push(clock.now(), PRI_SESSION, payload, payload)
         self._profile(sessions, n_events, n_steps)
@@ -1690,6 +1823,7 @@ class ConcurrentEpisodeEngine:
         n_tasks = int(lat.size)
         makespan = max((s.clock.now() for s in sessions), default=0.0)
         rstats = self.router.stats
+        ts = self.tstats
         fr = self._faults
         recovery_s, unrecovered = fr.recovery_stats() if fr else (0.0, 0)
         fo_p95, steady_p95 = fr.attributed_p95() if fr else (0.0, 0.0)
@@ -1777,6 +1911,21 @@ class ConcurrentEpisodeEngine:
             recovery_tokens=(getattr(rec_pol, "prompt_tokens", 0)
                              + getattr(rec_pol, "completion_tokens", 0)),
             autoscale_actions=fr.autoscale_actions if fr else 0,
+            autoscale_deferred=(self.autoscaler.deferred
+                                if self.autoscaler else 0),
+            p99_task_latency_s=(float(np.percentile(lat, 99))
+                                if n_tasks else 0.0),
+            traffic_spawned=ts.spawned if ts else 0,
+            traffic_completed=ts.completed if ts else 0,
+            traffic_in_system=ts.in_system if ts else 0,
+            traffic_offered_rate=ts.offered_rate if ts else 0.0,
+            traffic_measured_rate=(ts.measured_rate(float(makespan))
+                                   if ts else 0.0),
+            traffic_mean_sojourn_s=ts.mean_sojourn_s() if ts else 0.0,
+            traffic_mean_in_system=(ts.mean_in_system(float(makespan))
+                                    if ts else 0.0),
+            traffic_little_residual=(ts.little_residual(float(makespan))
+                                     if ts else 0.0),
         )
 
 

@@ -159,6 +159,23 @@ class WorkloadSampler:
                  zipf_global: bool = False,
                  hot_k: int = 4, hot_p: float = 0.9, phase_len: int = 60,
                  n_groups: int = 4, group: int = 0, spill_p: float = 0.15):
+        # fail-fast parameter validation (ISSUE 7): a bad rate/probability
+        # here silently skews every downstream table — reject loudly
+        if not 0.0 <= reuse_rate <= 1.0:
+            raise ValueError(f"reuse_rate must be in [0, 1], "
+                             f"got {reuse_rate}")
+        if scenario not in ("working", "zipf", "scan", "hotspot",
+                            "affinity_zipf"):
+            raise ValueError(f"unknown scenario {scenario!r}")
+        if zipf_a <= 0.0:
+            raise ValueError(f"zipf_a must be > 0, got {zipf_a}")
+        if not 0.0 <= hot_p <= 1.0:
+            raise ValueError(f"hot_p must be in [0, 1], got {hot_p}")
+        if not 0.0 <= spill_p <= 1.0:
+            raise ValueError(f"spill_p must be in [0, 1], got {spill_p}")
+        if hot_k < 1 or phase_len < 1:
+            raise ValueError(f"hot_k/phase_len must be >= 1, "
+                             f"got ({hot_k}, {phase_len})")
         self.reuse_rate = reuse_rate
         self.rng = random.Random(seed)
         self.keys = all_keys()

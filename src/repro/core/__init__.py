@@ -4,7 +4,8 @@ Cache mechanism (``cache``), eviction policies with natural-language
 descriptions (``policies``), cross-session admission with a shared
 frequency sketch (``admission``), cache ops as callable tools (``tools``),
 programmatic vs GPT-driven controllers (``controller``), prompt templates
-(``prompts``), and multi-pod localized caching (``distributed_cache``).
+(``prompts``), multi-pod localized caching (``distributed_cache``), and
+open-loop session-arrival processes (``traffic``).
 """
 from repro.core.admission import (  # noqa: F401
     ADMISSIONS,
@@ -30,4 +31,16 @@ from repro.core.tools import (  # noqa: F401
     ToolResult,
     ToolSpec,
     make_cache_tools,
+)
+from repro.core.traffic import (  # noqa: F401
+    ArrivalProcess,
+    ClosedLoopTraffic,
+    DiurnalTraffic,
+    MMPPTraffic,
+    PoissonTraffic,
+    SessionArrival,
+    TrafficStats,
+    find_knee,
+    make_traffic,
+    slo_attainment,
 )

@@ -378,29 +378,59 @@ class BacklogAutoscaler:
     ``cooldown_s`` of sim time must pass between actions (a membership
     change invalidates the very signal that triggered it: the reshuffled
     keys demand-load against their new owners, inflating backlog for a
-    while — reacting to that echo would flap). Known open-loop follow-up
-    (see ROADMAP): the policy does not model the warm-up cost of the pod
-    it adds, so under a short surge it can pay the reshuffle twice."""
+    while — reacting to that echo would flap).
+
+    **Warm-up-aware gate** (``warmup_aware=True``, closing the PR-6
+    open-loop follow-up): a scale_out is only worth paying when the
+    surge is predicted to outlive the warm-up of the pod it adds — the
+    rendezvous reshuffle forces ~1/(n+1) of resident keys to re-warm via
+    demand loads, and a short burst ends before the new pod serves a
+    single warm hit, so the fleet pays the reshuffle twice (out AND in).
+    The gate uses observed surge persistence as the surge-length
+    predictor: the backlog must have stayed above ``high_backlog_s`` for
+    at least ``warmup_margin x rewarm_cost_s`` contiguous seconds
+    (``rewarm_cost_s`` is the engine's prediction, passed per decision)
+    before a scale_out fires; gated checks are counted in ``deferred``.
+    Default OFF — the PR-6 naive policy, digest-locked, is unchanged."""
 
     def __init__(self, check_every_s: float = 20.0,
                  high_backlog_s: float = 1.5, low_backlog_s: float = 0.2,
-                 max_extra: int = 2, cooldown_s: float = 60.0):
+                 max_extra: int = 2, cooldown_s: float = 60.0,
+                 warmup_aware: bool = False, warmup_margin: float = 1.0):
         assert check_every_s > 0 and high_backlog_s > low_backlog_s >= 0.0
+        assert warmup_margin >= 0.0
         self.check_every_s = check_every_s
         self.high_backlog_s = high_backlog_s
         self.low_backlog_s = low_backlog_s
         self.max_extra = max_extra
         self.cooldown_s = cooldown_s
+        self.warmup_aware = warmup_aware
+        self.warmup_margin = warmup_margin
         self.next_check = check_every_s
         self.added: List[str] = []       # pods this scaler added (LIFO)
         self.last_action_at = -1e18
         self.decisions: List[Tuple[float, str]] = []
+        self.surge_since: Optional[float] = None  # backlog-high onset
+        self.deferred = 0                # scale_outs the warm-up gate held
 
-    def decide(self, now: float, backlogs: Dict[str, float]) -> Optional[str]:
+    def decide(self, now: float, backlogs: Dict[str, float],
+               rewarm_cost_s: float = 0.0) -> Optional[str]:
+        # surge-age tracking runs on every check (even inside cooldown):
+        # persistence is a property of the signal, not of our actions
+        mean = (sum(backlogs.values()) / len(backlogs)) if backlogs else 0.0
+        if backlogs and mean > self.high_backlog_s:
+            if self.surge_since is None:
+                self.surge_since = now
+        else:
+            self.surge_since = None
         if now - self.last_action_at < self.cooldown_s or not backlogs:
             return None
-        mean = sum(backlogs.values()) / len(backlogs)
         if mean > self.high_backlog_s and len(self.added) < self.max_extra:
+            if self.warmup_aware:
+                age = now - self.surge_since
+                if age < self.warmup_margin * rewarm_cost_s:
+                    self.deferred += 1
+                    return None
             return SCALE_OUT
         if mean < self.low_backlog_s and self.added:
             return SCALE_IN

@@ -1,0 +1,490 @@
+"""Open-loop traffic engine + SLO/capacity harness (ISSUE 7).
+
+The test archetype of this PR: every new behavior ships with a property
+or statistical lock —
+
+* **generators** — seeded statistical tests: Poisson inter-arrival
+  mean/variance (CV^2 ~ 1), MMPP regime occupancy vs the stationary
+  dwell ratio plus burstiness (CV^2 > 1), diurnal rate integral ~
+  realized session count; determinism (same seed -> identical schedule);
+* **closed-loop degeneracy** — the degenerate arrival schedule
+  (everything at t=0, unbounded lifetimes) replays the closed-loop
+  engine bit-identically: property-tested over randomized configs
+  (extending the tests/test_locality.py harness pattern) and
+  digest-locked against the PR-4 `table_concurrency` and PR-6
+  `table_resilience` tables;
+* **queueing locks** — flow balance (spawned == completed + in_system,
+  in_system == 0 at episode end) on every capacity cell, Little's law
+  |L - lambda*W| at float precision, SLO attainment monotone
+  non-increasing in offered load, and a finite knee for >= 3 configs;
+* **fail-fast validation** — negative/zero rates, horizons, lifetime
+  bounds, SLO targets, penalties and probabilities raise ValueError at
+  construction (regression: they used to be silent NaN/stall bait);
+* **warm-up-aware autoscaler** (the PR-6 follow-up) — unit-level gate
+  semantics plus the end-to-end MMPP-surge comparison: the gate defers
+  scale_outs under short surges, cutting membership churn without
+  giving up the tail.
+"""
+import hashlib
+import random
+import statistics
+
+import pytest
+
+from benchmarks import tables
+from repro.agent.concurrency import ConcurrentEpisodeEngine, run_episode
+from repro.agent.geollm.workload import WorkloadSampler
+from repro.core.faults import SCALE_OUT, BacklogAutoscaler, FaultPlan
+from repro.core.traffic import (
+    ClosedLoopTraffic,
+    DiurnalTraffic,
+    MMPPTraffic,
+    PoissonTraffic,
+    SessionArrival,
+    TrafficStats,
+    find_knee,
+    make_traffic,
+    slo_attainment,
+)
+
+# the PR-4 lock test_locality.py already holds on the default table, and
+# the PR-6 fault-matrix reference at the 12-task stream this file replays
+PR4_CONCURRENCY_DIGEST = "8ec8ff89cfb17741"
+PR6_RESILIENCE_DIGEST_12 = "9ed9f62ca396989d"
+
+ZIPFG = {"scenario": "zipf", "scenario_kw": {"zipf_a": 1.1,
+                                             "zipf_global": True}}
+
+
+def _digest(obj) -> str:
+    return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]
+
+
+def _traces(res):
+    return [(t.time_s, t.tokens, repr(t.answers))
+            for s in res.sessions for t in s.traces]
+
+
+def _core_row(res):
+    """Metrics row minus the traffic_* ledger (observability fields the
+    open-loop run fills and the closed-loop baseline leaves zero)."""
+    return {k: v for k, v in res.metrics.row().items()
+            if not k.startswith("traffic_")}
+
+
+def _gaps(schedule):
+    ts = [a.at for a in schedule]
+    return [b - a for a, b in zip([0.0] + ts[:-1], ts)]
+
+
+# ---------------------------------------------------------------------------
+# Arrival generators: seeded statistical locks + determinism
+# ---------------------------------------------------------------------------
+
+def test_poisson_interarrival_mean_and_variance():
+    """Exponential inter-arrivals at rate 0.5/s: mean ~ 2s, variance ~
+    4s^2, CV^2 ~ 1 (the memoryless signature) at a fixed seed."""
+    sched = PoissonTraffic(0.5, 4000.0, seed=7).schedule()
+    gaps = _gaps(sched)
+    mu = statistics.mean(gaps)
+    var = statistics.variance(gaps)
+    assert len(sched) > 1500
+    assert mu == pytest.approx(2.0, rel=0.10)
+    assert var == pytest.approx(4.0, rel=0.25)
+    assert var / mu ** 2 == pytest.approx(1.0, rel=0.15)
+    assert all(a.at < 4000.0 for a in sched)
+    # arrival times strictly increase (exponential gaps are never 0)
+    assert all(b.at > a.at for a, b in zip(sched, sched[1:]))
+
+
+def test_poisson_expected_count():
+    p = PoissonTraffic(0.5, 4000.0, seed=7)
+    assert len(p) == pytest.approx(p.expected_sessions(), rel=0.10)
+
+
+def test_same_seed_identical_schedule_different_seed_not():
+    for build in (lambda s: PoissonTraffic(0.3, 500.0, seed=s,
+                                           lifetime_tasks=(2, 9)),
+                  lambda s: DiurnalTraffic(0.3, 500.0, seed=s),
+                  lambda s: MMPPTraffic(0.1, 0.8, 500.0, seed=s)):
+        a, b = build(3).schedule(), build(3).schedule()
+        assert a == b                      # dataclass equality: at+lifetime
+        assert build(3).schedule() != build(4).schedule()
+
+
+def test_schedule_is_memoized_and_pure():
+    p = PoissonTraffic(0.2, 300.0, seed=1)
+    assert p.schedule() is p.schedule()
+
+
+def test_lifetime_sampling_bounded_and_seeded():
+    sched = PoissonTraffic(0.5, 1000.0, seed=9,
+                           lifetime_tasks=(3, 7)).schedule()
+    assert all(3 <= a.lifetime_tasks <= 7 for a in sched)
+    assert len({a.lifetime_tasks for a in sched}) > 1   # actually sampled
+    fixed = PoissonTraffic(0.5, 200.0, seed=9, lifetime_tasks=5).schedule()
+    assert all(a.lifetime_tasks == 5 for a in fixed)
+
+
+def test_mmpp_regime_occupancy_and_burstiness():
+    """Realized high-regime occupancy ~ dwell_high/(dwell_low+dwell_high)
+    and inter-arrival CV^2 >> 1 (the burstiness MMPP exists to model)."""
+    mm = MMPPTraffic(0.1, 1.0, 4000.0, dwell_low_s=60.0, dwell_high_s=20.0,
+                     seed=5)
+    sched = mm.schedule()
+    occ = mm.high_time_s / (mm.high_time_s + mm.low_time_s)
+    assert occ == pytest.approx(mm.stationary_high, abs=0.05)
+    assert mm.switches > 50
+    assert mm.high_time_s + mm.low_time_s == pytest.approx(4000.0)
+    gaps = _gaps(sched)
+    cv2 = statistics.variance(gaps) / statistics.mean(gaps) ** 2
+    assert cv2 > 1.5                       # a plain Poisson sits at ~1.0
+    # realized rate ~ dwell-weighted offered rate
+    assert len(sched) / 4000.0 == pytest.approx(mm.offered_rate, rel=0.10)
+
+
+def test_diurnal_integral_matches_count_and_profile_shows():
+    d = DiurnalTraffic(0.4, 2400.0, amplitude=0.8, period_s=240.0, seed=11)
+    sched = d.schedule()
+    assert len(sched) == pytest.approx(d.expected_sessions(), rel=0.10)
+    # the mid-period (peak) half must carry well over half the arrivals
+    peak = sum(1 for a in sched
+               if 0.25 <= (a.at % d.period_s) / d.period_s < 0.75)
+    trough = len(sched) - peak
+    assert peak / max(trough, 1) > 2.0
+    # rate_at spans [base*(1-amp), base*(1+amp)]
+    assert d.rate_at(0.0) == pytest.approx(0.4 * 0.2)
+    assert d.rate_at(120.0) == pytest.approx(0.4 * 1.8)
+
+
+def test_closed_loop_schedule_is_degenerate():
+    c = ClosedLoopTraffic(5)
+    assert c.schedule() == [SessionArrival(0.0, None)] * 5
+    assert make_traffic("closed", 3).schedule() == \
+        [SessionArrival(0.0, None)] * 3
+    p = PoissonTraffic(0.5, 100.0, seed=0)
+    assert make_traffic(p, 99) is p        # pass-through, count ignored
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast validation (regression: silent NaN/stall bait)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("build", [
+    lambda: PoissonTraffic(0.0, 100.0),
+    lambda: PoissonTraffic(-1.0, 100.0),
+    lambda: PoissonTraffic(0.5, 0.0),
+    lambda: PoissonTraffic(0.5, -5.0),
+    lambda: PoissonTraffic(0.5, 100.0, lifetime_tasks=0),
+    lambda: PoissonTraffic(0.5, 100.0, lifetime_tasks=(0, 4)),
+    lambda: PoissonTraffic(0.5, 100.0, lifetime_tasks=(5, 2)),
+    lambda: PoissonTraffic(0.5, 100.0, max_arrivals=0),
+    lambda: DiurnalTraffic(0.0, 100.0),
+    lambda: DiurnalTraffic(0.4, 100.0, amplitude=-0.1),
+    lambda: DiurnalTraffic(0.4, 100.0, amplitude=1.5),
+    lambda: DiurnalTraffic(0.4, 100.0, period_s=0.0),
+    lambda: MMPPTraffic(0.0, 1.0, 100.0),
+    lambda: MMPPTraffic(1.0, 0.5, 100.0),     # high < low
+    lambda: MMPPTraffic(0.1, 1.0, 100.0, dwell_low_s=0.0),
+    lambda: MMPPTraffic(0.1, 1.0, 100.0, dwell_high_s=-2.0),
+    lambda: ClosedLoopTraffic(0),
+    lambda: make_traffic("open-sesame", 4),
+    lambda: slo_attainment([1.0], 0.0),
+    lambda: find_knee([(0.1, 5.0)], -1.0),
+], ids=lambda b: "case")
+def test_traffic_params_fail_fast(build):
+    with pytest.raises(ValueError):
+        build()
+
+
+def test_empty_schedule_fails_fast():
+    # rate*horizon << 1 at this seed produces zero arrivals: the engine
+    # must refuse to build, not run an empty fleet into NaN metrics
+    with pytest.raises(ValueError, match="empty"):
+        PoissonTraffic(1e-6, 1.0, seed=0).schedule()
+
+
+def test_max_arrivals_guard_fails_fast():
+    with pytest.raises(ValueError, match="max_arrivals"):
+        PoissonTraffic(10.0, 100.0, seed=0, max_arrivals=50).schedule()
+
+
+def test_engine_params_fail_fast():
+    with pytest.raises(ValueError, match="remote_read_penalty"):
+        ConcurrentEpisodeEngine(2, n_pods=2, affinity="sticky",
+                                remote_read_penalty=0.5)
+    with pytest.raises(ValueError, match="capacity_per_pod"):
+        ConcurrentEpisodeEngine(2, n_pods=2, capacity_per_pod=0)
+    with pytest.raises(ValueError, match="tasks_per_session"):
+        ConcurrentEpisodeEngine(2, n_pods=2).run(tasks_per_session=0)
+    with pytest.raises(ValueError, match="reuse_rate"):
+        ConcurrentEpisodeEngine(2, n_pods=2).run(5, reuse_rate=1.5)
+    with pytest.raises(ValueError, match="traffic"):
+        ConcurrentEpisodeEngine(2, n_pods=2, traffic="bogus")
+
+
+def test_workload_sampler_params_fail_fast():
+    for kw in (dict(reuse_rate=-0.1), dict(reuse_rate=1.1),
+               dict(scenario="nope"), dict(zipf_a=0.0),
+               dict(scenario="hotspot", hot_p=1.5),
+               dict(scenario="hotspot", hot_k=0),
+               dict(scenario="hotspot", phase_len=0),
+               dict(scenario="affinity_zipf", spill_p=-0.2)):
+        with pytest.raises(ValueError):
+            WorkloadSampler(**kw)
+
+
+def test_capacity_table_rejects_bad_slo():
+    with pytest.raises(ValueError, match="slo_p99_s"):
+        tables.table_capacity(slo_p99_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop degeneracy: property replay + digest locks
+# ---------------------------------------------------------------------------
+
+def _random_configs(n):
+    rng = random.Random(0x7AFF1C)
+    scenarios = [("working", {}),
+                 ("zipf", {"zipf_a": 1.2}),
+                 ("zipf", {"zipf_a": 1.1, "zipf_global": True}),
+                 ("scan", {}),
+                 ("hotspot", {})]
+    out = []
+    for _ in range(n):
+        scen, skw = rng.choice(scenarios)
+        out.append(dict(
+            n_sessions=rng.randint(2, 8),
+            tasks=rng.randint(4, 8),
+            n_pods=rng.randint(2, 4),
+            reuse=rng.choice([0.3, 0.8]),
+            seed=rng.randint(0, 10_000),
+            scenario=scen, scenario_kw=skw,
+            prefetch=rng.random() < 0.5,
+            admission=rng.choice([None, "tinylfu"]),
+            replication=rng.random() < 0.5,
+            faults=rng.random() < 0.5,
+        ))
+    return out
+
+
+@pytest.mark.parametrize("cfg", _random_configs(8),
+                         ids=lambda c: (f"{c['scenario']}-s{c['seed']}"
+                                        + ("-f" if c["faults"] else "")))
+def test_closed_loop_traffic_replays_engine_bit_identically(cfg):
+    """THE degeneracy contract: spawning every session at t=0 with an
+    unbounded lifetime through the spawn/retire event path replays the
+    closed-loop engine bit-identically — times, tokens, answers, every
+    non-traffic metric — whatever the workload, data-plane feature mix,
+    or fault schedule."""
+    common = dict(n_pods=cfg["n_pods"], reuse_rate=cfg["reuse"],
+                  seed=cfg["seed"], scenario=cfg["scenario"],
+                  scenario_kw=cfg["scenario_kw"], prefetch=cfg["prefetch"],
+                  admission=cfg["admission"])
+    if cfg["replication"]:
+        common.update(replication=True,
+                      replication_kw={"epoch_s": 15.0, "promote_min": 3,
+                                      "miss_min": 1})
+    if cfg["faults"]:
+        common.update(fault_plan=FaultPlan.single(
+            "pod1", 30.0, restore_at=45.0))
+    base = run_episode(cfg["n_sessions"], cfg["tasks"], **common)
+    closed = run_episode(cfg["n_sessions"], cfg["tasks"], **common,
+                         traffic="closed")
+    assert _traces(base) == _traces(closed)
+    assert _core_row(base) == _core_row(closed)
+    # and the open-loop ledger still balanced: everyone spawned at t=0,
+    # everyone retired by the end
+    m = closed.metrics
+    assert m.traffic_spawned == cfg["n_sessions"]
+    assert m.traffic_completed == m.traffic_spawned
+    assert m.traffic_in_system == 0
+    assert m.traffic_little_residual < 1e-9
+
+
+def test_closed_loop_replays_pr4_concurrency_digest():
+    """Digest lock: the full default concurrency table routed through the
+    spawn/retire event path is bit-identical to the PR-4 reference that
+    tests/test_locality.py already locks on the traffic-free engine."""
+    rows = tables.table_concurrency(tasks_per_session=25,
+                                    engine_kw={"traffic": "closed"})
+    assert _digest(rows) == PR4_CONCURRENCY_DIGEST
+
+
+def test_closed_loop_replays_pr6_resilience_digest():
+    """Digest lock at the fault-matrix level: the PR-6 resilience table
+    (fail/restore/churn/elastic/autoscale x replication) replays
+    bit-identically under closed-loop traffic — spawn/retire events
+    compose with PRI_FAULT membership events without moving a cell."""
+    base = tables.table_resilience(tasks_per_session=12)
+    closed = tables.table_resilience(tasks_per_session=12,
+                                     engine_kw={"traffic": "closed"})
+    assert _digest(base) == PR6_RESILIENCE_DIGEST_12
+    assert _digest(closed) == PR6_RESILIENCE_DIGEST_12
+
+
+# ---------------------------------------------------------------------------
+# Queueing locks: flow balance, Little's law, SLO monotonicity, the knee
+# ---------------------------------------------------------------------------
+
+def _open_loop(rate, seed=1, **kw):
+    p = PoissonTraffic(rate, 150.0, seed=seed, lifetime_tasks=6)
+    return run_episode(1, 25, n_pods=4, reuse_rate=0.3, seed=1,
+                       prefetch=True, capacity_per_pod=8, traffic=p,
+                       **dict(ZIPFG, **kw))
+
+
+def test_flow_balance_and_littles_law_on_open_loop_episode():
+    res = _open_loop(0.4)
+    m = res.metrics
+    assert m.n_sessions == m.traffic_spawned == len(res.sessions)
+    # flow balance: nothing leaks — and at episode end nothing is left
+    assert m.traffic_spawned == m.traffic_completed + m.traffic_in_system
+    assert m.traffic_in_system == 0
+    assert m.resilience_incomplete_sessions == 0
+    # Little's law: L and W are computed by INDEPENDENT code paths
+    # (event-sweep integral vs sojourn sums); the residual must sit at
+    # float precision, and the measured rate near the offered rate
+    assert m.traffic_little_residual < 1e-9
+    assert m.traffic_offered_rate == pytest.approx(0.4)
+    assert m.traffic_measured_rate == pytest.approx(0.4, rel=0.25)
+    assert m.traffic_mean_sojourn_s > 0.0
+    assert m.traffic_mean_in_system > 0.0
+    # every bounded session ran exactly its lifetime
+    assert all(len(s.traces) == len(s.tasks) == 6 for s in res.sessions)
+
+
+def test_traffic_stats_ledger_unit():
+    ts = TrafficStats(offered_rate=0.5)
+    ts.note_spawn(0.0, 0)
+    ts.note_spawn(2.0, 1)
+    ts.note_retire(4.0, 0)
+    ts.note_retire(8.0, 1)
+    assert (ts.spawned, ts.completed, ts.in_system) == (2, 2, 0)
+    assert ts.mean_sojourn_s() == pytest.approx(5.0)
+    # N(t): 1 on [0,2), 2 on [2,4), 1 on [4,8) -> integral 10 over T=10
+    assert ts.mean_in_system(10.0) == pytest.approx(1.0)
+    assert ts.measured_rate(10.0) == pytest.approx(0.2)
+    assert ts.little_residual(10.0) == pytest.approx(0.0)
+
+
+def test_slo_attainment_monotone_non_increasing_in_offered_load():
+    """The capacity sweep's core property on stable cells: pushing more
+    offered load through the same fleet can only hold or hurt the SLO."""
+    fracs = []
+    for rate in (0.1, 0.2, 0.4, 0.8):
+        res = _open_loop(rate)
+        lats = [t.time_s for s in res.sessions for t in s.traces]
+        fracs.append(slo_attainment(lats, 10.0))
+        m = res.metrics
+        assert m.traffic_spawned == m.traffic_completed   # stable cell
+    assert all(a >= b - 1e-12 for a, b in zip(fracs, fracs[1:])), fracs
+    assert fracs[0] == 1.0          # unloaded fleet meets the SLO outright
+
+
+def test_capacity_table_reports_finite_knees_and_balanced_cells():
+    """table_capacity acceptance: a finite knee for >= 3 configs, flow
+    balance + zero incomplete in every cell, SLO attainment monotone
+    per config (a reduced sweep keeps the tier-1 budget)."""
+    rows = tables.table_capacity(rates=(0.2, 0.4, 0.8), horizon_s=100.0)
+    cells = [r.split(",") for r in rows if r.startswith("capacity,")]
+    knees = {c[2]: c[3] for c in [r.split(",") for r in rows]
+             if c[0] == "capacity_knee"}
+    assert len(cells) == 12                       # 4 configs x 3 rates
+    finite = [k for k, v in knees.items() if v != ""]
+    assert len(finite) >= 3, knees
+    by_cfg = {}
+    for c in cells:
+        spawned, completed, in_sys = int(c[5]), int(c[6]), int(c[7])
+        assert spawned == completed + in_sys      # flow balance
+        assert in_sys == 0
+        assert int(c[17]) == 0                    # incomplete
+        assert float(c[15]) < 1e-9                # Little residual
+        by_cfg.setdefault(c[2], []).append(float(c[12]))
+    for cfg, fr in by_cfg.items():
+        assert all(a >= b - 1e-12 for a, b in zip(fr, fr[1:])), (cfg, fr)
+
+
+def test_open_loop_composes_with_faults():
+    """A pod failure mid-horizon under Poisson arrivals: failover counted,
+    fleet recovers, ledger still balances, nothing stalls forever."""
+    p = PoissonTraffic(0.3, 120.0, seed=2, lifetime_tasks=5)
+    res = run_episode(1, 25, n_pods=4, reuse_rate=0.3, seed=1,
+                      prefetch=True, capacity_per_pod=8, traffic=p,
+                      fault_plan=FaultPlan.single("pod3", 40.0,
+                                                  restore_at=55.0),
+                      **ZIPFG)
+    m = res.metrics
+    assert m.resilience_failovers == 1
+    assert m.resilience_restores == 1
+    assert m.traffic_spawned == m.traffic_completed
+    assert m.traffic_in_system == 0
+    assert m.resilience_incomplete_sessions == 0
+    assert m.traffic_little_residual < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Warm-up-aware autoscaler (the PR-6 follow-up, measurable end-to-end)
+# ---------------------------------------------------------------------------
+
+def test_warmup_gate_defers_until_surge_outlives_rewarm_cost():
+    sc = BacklogAutoscaler(check_every_s=10.0, high_backlog_s=1.0,
+                           low_backlog_s=0.1, cooldown_s=0.0,
+                           warmup_aware=True)
+    high = {"p0": 5.0}
+    # surge onset at t=10: age 0 < rewarm 15 -> deferred
+    assert sc.decide(10.0, high, rewarm_cost_s=15.0) is None
+    assert sc.deferred == 1
+    # persisted to t=20: age 10 < 15 -> still deferred
+    assert sc.decide(20.0, high, rewarm_cost_s=15.0) is None
+    assert sc.deferred == 2
+    # t=30: age 20 >= 15 -> the surge outlived the predicted warm-up
+    assert sc.decide(30.0, high, rewarm_cost_s=15.0) == SCALE_OUT
+    # a dip resets the surge clock
+    assert sc.decide(40.0, {"p0": 0.5}, rewarm_cost_s=15.0) is None
+    assert sc.decide(50.0, high, rewarm_cost_s=15.0) is None
+    assert sc.surge_since == 50.0
+    # zero predicted cost (cold caches): gate passes immediately
+    sc2 = BacklogAutoscaler(cooldown_s=0.0, warmup_aware=True)
+    assert sc2.decide(20.0, {"p0": 5.0}, rewarm_cost_s=0.0) == SCALE_OUT
+
+
+def test_warmup_defaults_off_and_naive_decide_unchanged():
+    """The PR-6 digest-locked behavior: warmup_aware defaults False and
+    the naive policy ignores rewarm_cost_s entirely."""
+    sc = BacklogAutoscaler(check_every_s=10.0, high_backlog_s=1.0,
+                           low_backlog_s=0.1, cooldown_s=0.0)
+    assert not sc.warmup_aware
+    assert sc.decide(10.0, {"p0": 5.0}, rewarm_cost_s=1e9) == SCALE_OUT
+    assert sc.deferred == 0
+
+
+def _surge_episode(warmup_aware, seed):
+    mm = MMPPTraffic(0.05, 1.2, 240.0, dwell_low_s=70.0, dwell_high_s=15.0,
+                     seed=seed, lifetime_tasks=5)
+    kw = {"check_every_s": 10.0, "high_backlog_s": 0.5,
+          "low_backlog_s": 0.05, "max_extra": 2, "cooldown_s": 20.0}
+    if warmup_aware:
+        kw["warmup_aware"] = True
+    return run_episode(1, 25, n_pods=4, reuse_rate=0.3, seed=1,
+                       prefetch=True, capacity_per_pod=8, traffic=mm,
+                       autoscale=True, autoscale_kw=kw, **ZIPFG).metrics
+
+
+@pytest.mark.parametrize("seed", (1, 3))
+def test_warmup_aware_autoscaler_cuts_churn_under_short_surges(seed):
+    """End-to-end (the ROADMAP follow-up): under short MMPP surges the
+    naive autoscaler pays the rendezvous reshuffle on surges that end
+    before the new pod warms; the warm-up-aware gate defers those
+    scale_outs — strictly less membership churn, a tail no worse than
+    5%, and the zero-stall-forever gate intact."""
+    naive = _surge_episode(False, seed)
+    warm = _surge_episode(True, seed)
+    assert naive.resilience_scale_outs >= 1       # the surge bites
+    assert warm.autoscale_deferred >= 1           # the gate engaged
+    assert warm.resilience_scale_outs < naive.resilience_scale_outs
+    assert warm.resilience_scale_ins <= naive.resilience_scale_ins
+    assert warm.p99_task_latency_s <= naive.p99_task_latency_s * 1.05
+    for m in (naive, warm):
+        assert m.resilience_incomplete_sessions == 0
+        assert m.traffic_in_system == 0
