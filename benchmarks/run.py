@@ -114,6 +114,9 @@ def main() -> None:
         section("capacity",
                 "Open-loop capacity sweep (Poisson arrivals, SLO knee)",
                 tables.table_capacity, parallel=par)
+        section("coherence",
+                "Mutable data plane (write streams x coherence policies)",
+                tables.table_coherence, parallel=par)
     section("belady", "Beyond-paper: Belady oracle bound",
             tables.belady_bound, n=n23)
 
@@ -179,6 +182,22 @@ def main() -> None:
         cap_rows = [c for c in cap_all if c[0] == "capacity"]
         cap_knee = {c[2]: (float(c[3]) if c[3] else None)
                     for c in cap_all if c[0] == "capacity_knee"}
+        cap_arr = [c for c in cap_all if c[0] == "capacity_arrival"]
+        coh_rows = [r.split(",") for r in by_id.get("coherence", [])
+                    if r.startswith("coherence,")]
+        # headline cell: update_heavy at the base write rate, by policy
+        coh_cell = {c[4]: c for c in coh_rows
+                    if c[1] == "update_heavy" and float(c[5]) == 0.2}
+
+        def _coh_share_monotone_ok():
+            """1 when the serve-stale stale-read share is non-decreasing
+            in the mutation rate (update_heavy stale20 rows, all rates)."""
+            if not coh_rows:
+                return None
+            pts = sorted((float(c[5]), float(c[16])) for c in coh_rows
+                         if (c[1], c[4]) == ("update_heavy", "stale20"))
+            return int(all(pts[i][1] <= pts[i + 1][1] + 1e-12
+                           for i in range(len(pts) - 1)))
 
         def _cap_monotone_ok():
             """1 when every config's SLO attainment is non-increasing in
@@ -192,7 +211,7 @@ def main() -> None:
                 all(f[i] >= f[i + 1] - 1e-12 for i in range(len(f) - 1))
                 for f in by_cfg.values()))
         record = {
-            "schema": "bench_dcache/v6",
+            "schema": "bench_dcache/v7",
             "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "platform": {"python": platform.python_version(),
                          "machine": platform.machine()},
@@ -315,6 +334,32 @@ def main() -> None:
                     sum(int(c[17]) for c in cap_rows)
                     if cap_rows else None),
                 "capacity_slo_monotone_ok": _cap_monotone_ok(),
+                # non-Poisson arrival axes (ISSUE 8 satellite): the same
+                # flow-balance and zero-incomplete gates on the diurnal
+                # and MMPP rows
+                "capacity_arrival_flow_imbalance_total": (
+                    sum(int(c[5]) - int(c[6]) - int(c[7])
+                        for c in cap_arr) if cap_arr else None),
+                "capacity_arrival_incomplete_total": (
+                    sum(int(c[17]) for c in cap_arr) if cap_arr else None),
+                # mutable data plane (ISSUE 8): stale reads under
+                # write-invalidate summed over every cell (must be 0),
+                # the GPT-driven serve-stale headline (update_heavy llm
+                # vs wi p95, must be > 1 at a bounded stale share), the
+                # graded agreement of the cache_update verdicts, and the
+                # stale-share-monotone-in-write-rate lock (must be 1)
+                "coherence_wi_stale_reads_total": (
+                    sum(int(c[12]) for c in coh_rows if c[4] == "wi")
+                    if coh_rows else None),
+                "coherence_mutations_total": (
+                    sum(int(c[9]) for c in coh_rows) if coh_rows else None),
+                "coherence_headline_p95_speedup": _adm(coh_cell, "llm", 20),
+                "coherence_headline_stale_share_pct": _adm(coh_cell, "llm",
+                                                           16),
+                "coherence_llm_agreement_pct": _adm(coh_cell, "llm", 18),
+                "coherence_stale20_max_staleness_s": _adm(coh_cell,
+                                                          "stale20", 17),
+                "coherence_share_monotone_ok": _coh_share_monotone_ok(),
             },
         }
         if args.profile:

@@ -636,7 +636,9 @@ def table_capacity(rates: Sequence[float] = (0.1, 0.2, 0.4, 0.8),
     zero-stall-forever gate carried over), a Little's-law residual
     |L - lambda*W| at float precision, and ``slo_frac`` monotone
     non-increasing in the offered rate per config."""
-    from repro.core.traffic import PoissonTraffic, find_knee, slo_attainment
+    from repro.core.traffic import (DiurnalTraffic, MMPPTraffic,
+                                    PoissonTraffic, find_knee,
+                                    slo_attainment)
 
     if slo_p99_s <= 0.0:
         raise ValueError(f"slo_p99_s must be > 0, got {slo_p99_s}")
@@ -683,6 +685,142 @@ def table_capacity(rates: Sequence[float] = (0.1, 0.2, 0.4, 0.8),
         knee = find_knee(pts, slo_p99_s)
         rows.append(f"capacity_knee,zipfg-1.1,{name},"
                     f"{knee if knee is not None else ''},{slo_p99_s}")
+    # ISSUE-8 satellite: non-Poisson arrival axes — diurnal (Lewis-Shedler
+    # thinned day/night sinusoid) and 2-state MMPP bursts — on the tinylfu
+    # config. Rows carry the "capacity_arrival" prefix so the committed
+    # "capacity" rows, the knee rows, and the 12-cell CI capacity smoke
+    # stay bit-identical; columns match the capacity rows, with the config
+    # tagged by the arrival process and rate_sps reporting the process's
+    # MEAN offered rate (both obey the same flow-balance and Little's-law
+    # locks, applied in tests/test_coherence.py).
+    arrivals = (
+        ("diurnal", lambda: DiurnalTraffic(
+            0.4, horizon_s, amplitude=0.8, period_s=60.0, seed=1,
+            lifetime_tasks=lifetime_tasks)),
+        ("mmpp", lambda: MMPPTraffic(
+            0.2, 1.2, horizon_s, dwell_low_s=40.0, dwell_high_s=15.0,
+            seed=1, lifetime_tasks=lifetime_tasks)),
+    )
+    acells = [lambda mk=mk: run_episode(
+                  1, 25, n_pods=n_pods, reuse_rate=0.3, seed=1,
+                  prefetch=True, capacity_per_pod=8, admission="tinylfu",
+                  traffic=mk(), **zipfg)
+              for _n, mk in arrivals]
+    for (name, mk), res in zip(arrivals, _run_cells(acells, parallel)):
+        m = res.metrics
+        lats = [tr.time_s for s in res.sessions for tr in s.traces]
+        frac = slo_attainment(lats, slo_p99_s)
+        rate = mk().offered_rate
+        rows.append(
+            f"capacity_arrival,zipfg-1.1,tinylfu+{name},{rate:.3f},"
+            f"{slo_p99_s},{m.traffic_spawned},{m.traffic_completed},"
+            f"{m.traffic_in_system},{m.throughput_tasks_per_s:.4f},"
+            f"{m.p50_task_latency_s:.3f},{m.p95_task_latency_s:.3f},"
+            f"{m.p99_task_latency_s:.3f},{frac:.4f},"
+            f"{m.traffic_mean_sojourn_s:.3f},"
+            f"{m.traffic_mean_in_system:.3f},"
+            f"{m.traffic_little_residual:.2e},{100*m.local_hit_rate:.2f},"
+            f"{m.resilience_incomplete_sessions}")
+    return rows
+
+
+def table_coherence(tasks_per_session: int = 12,
+                    parallel: bool = False) -> List[str]:
+    """Beyond-paper: mutable data plane with cache coherence (ISSUE 8).
+
+    The read-only tables assume a key's data never changes; this table
+    runs seeded :class:`~repro.core.coherence.MutationPlan` write streams
+    against the mutation-facing workloads (``update_heavy`` /
+    ``mixed_rw`` / ``flash_fresh`` — see ``WorkloadSampler``) and sweeps
+    the coherence policy axis on identical seeds:
+
+    * ``wi`` — write-invalidate: every write drops all cached copies
+      (replicas included); no consumed value is ever stale (locked).
+    * ``wt`` — write-through: every write re-stamps all cached copies to
+      the new version in place; no stale reads, no invalidation misses.
+    * ``ttl30`` — copies served until staleness exceeds 30s, then
+      refreshed on consume.
+    * ``stale20`` — bounded staleness: a version-lagged copy is served
+      as long as its staleness is within 20s, else refreshed; the bound
+      is a hard clamp (locked).
+    * ``llm`` — the GPT-driven ``cache_update`` path on the stale20
+      rule: the refresh-vs-serve-stale verdict comes from the prompted
+      decision model, graded against the programmatic rule
+      (``agreement_pct``); the engine clamp keeps a slipped verdict from
+      ever violating the bound.
+
+    ``p95_speedup`` compares each policy row against the same-scenario
+    ``wi`` row (>1 = serving bounded-stale copies beats refreshing
+    eagerly). The headline is the ``update_heavy`` cell: ``llm`` must
+    beat ``wi`` on p95 at a bounded stale-read share. The two extra
+    ``stale20`` rows sweep the mutation rate (monotonicity lock:
+    stale-read share is non-decreasing in the write rate — see
+    tests/test_coherence.py)."""
+    from repro.agent.geollm.workload import mutation_hot_keys
+    from repro.core.coherence import ARRIVAL, MutationPlan
+
+    rows = ["table,scenario,n_sessions,n_pods,policy,mut_rate,p50_s,p95_s,"
+            "stall_total_s,mutations,invalidations,writethroughs,"
+            "stale_reads,refresh_loads,superseded,clamped,stale_share_pct,"
+            "max_staleness_s,agreement_pct,coh_tokens,p95_speedup"]
+    horizon = 150.0
+    hot = mutation_hot_keys(4)
+
+    def plan_for(scenario: str, rate: float) -> MutationPlan:
+        if scenario == "flash_fresh":
+            # a feed of new scenes walking the same shuffled order the
+            # flash crowd's hot window advances over
+            return MutationPlan.periodic(hot, 1.0 / rate, start_s=5.0,
+                                         horizon_s=horizon, kind=ARRIVAL)
+        return MutationPlan.random_plan(hot, rate, horizon, seed=5)
+
+    policies = [
+        ("wi", {"coherence": "write-invalidate"}),
+        ("wt", {"coherence": "write-through"}),
+        ("ttl30", {"coherence": "ttl", "coherence_kw": {"ttl_s": 30.0}}),
+        ("stale20", {"coherence": "serve-stale",
+                     "coherence_kw": {"bound_s": 20.0}}),
+        ("llm", {"coherence": "serve-stale", "coherence_impl": "llm",
+                 "coherence_kw": {"bound_s": 20.0}}),
+    ]
+    scen_kw = {
+        "update_heavy": {"scenario": "update_heavy",
+                         "scenario_kw": {"hot_k": 4, "hot_p": 0.85}},
+        "mixed_rw": {"scenario": "mixed_rw", "scenario_kw": {"hot_k": 4}},
+        "flash_fresh": {"scenario": "flash_fresh",
+                        "scenario_kw": {"hot_k": 4, "hot_p": 0.85,
+                                        "phase_len": 30}},
+    }
+    base_rate = 0.2
+    grid = [(sc, pol, base_rate) for sc in scen_kw for pol in policies]
+    # mutation-rate monotonicity axis (update_heavy, serve-stale)
+    grid += [("update_heavy", policies[3], r) for r in (0.05, 0.5)]
+    cells = [lambda sc=sc, kw=pol[1], rate=rate: run_episode(
+                 16, tasks_per_session, n_pods=4, reuse_rate=0.3, seed=0,
+                 mutations=plan_for(sc, rate),
+                 **dict(scen_kw[sc], **kw))
+             for sc, pol, rate in grid]
+    results = _run_cells(cells, parallel)
+    base_p95: Dict[str, float] = {}
+    for (sc, (label, _), rate), res in zip(grid, results):
+        m = res.metrics
+        if label == "wi":
+            base_p95[sc] = m.p95_task_latency_s
+            sp = ""
+        elif rate != base_rate:
+            sp = ""     # different write stream: not comparable to wi
+        else:
+            sp = f"{base_p95[sc] / m.p95_task_latency_s:.3f}"
+        rows.append(
+            f"coherence,{sc},16,4,{label},{rate:g},"
+            f"{m.p50_task_latency_s:.3f},{m.p95_task_latency_s:.3f},"
+            f"{m.total_stall_s:.3f},{m.coherence_mutations},"
+            f"{m.coherence_invalidations},{m.coherence_writethroughs},"
+            f"{m.coherence_stale_reads},{m.coherence_refresh_loads},"
+            f"{m.coherence_superseded_fills},{m.coherence_clamped},"
+            f"{100 * m.coherence_stale_share:.2f},"
+            f"{m.coherence_max_staleness_s:.3f},"
+            f"{100 * m.coherence_agreement:.2f},{m.coherence_tokens},{sp}")
     return rows
 
 

@@ -82,6 +82,8 @@ class SimLLM:
             return self._replication_decision(prompt)
         if "RECOVERY controller" in prompt:
             return self._recovery_decision(prompt)
+        if "COHERENCE controller" in prompt:
+            return self._coherence_decision(prompt)
         # planning / answer prompts: canned completion (token accounting is
         # handled by the agent's latency model)
         return ("Thought: I will decompose the task and call the tools in "
@@ -200,6 +202,24 @@ class SimLLM:
             decision = "lazy" if decision == "rewarm" else "rewarm"
         return ("Thought: weighing the lost key's frequency against the "
                 "re-warm threshold.\n"
+                f'Answer: {json.dumps({"decision": decision})}')
+
+    # -- cache COHERENCE (refresh vs serve-stale) ----------------------------
+    def _coherence_decision(self, prompt: str) -> str:
+        """Refresh-vs-serve-stale decided by reading the evidence block:
+        the copy's staleness and the policy's declared bound are in the
+        prompt; the calibrated error rate flips the verdict (the engine
+        clamps beyond-bound serve_stale answers, so a slip can cost
+        latency but never the staleness contract)."""
+        staleness = float(re.findall(r'"staleness_s": ([0-9.]+)',
+                                     prompt)[-1])
+        bound = float(re.findall(r'"bound_s": ([0-9.eE+-]+)', prompt)[-1])
+        decision = "serve_stale" if staleness <= bound else "refresh"
+        if self.rng.random() < self.profile.cache_eps:
+            decision = ("refresh" if decision == "serve_stale"
+                        else "serve_stale")
+        return ("Thought: weighing the copy's staleness against the "
+                "declared bound.\n"
                 f'Answer: {json.dumps({"decision": decision})}')
 
     def _victim(self, state: Dict[str, dict], policy_text: str,

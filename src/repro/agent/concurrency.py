@@ -113,6 +113,15 @@ from repro.core.faults import (
     RetryPolicy,
     make_recovery,
 )
+from repro.core.coherence import (
+    ARRIVAL,
+    REFRESH,
+    SERVE_STALE,
+    CoherenceStats,
+    MutationEvent,
+    MutationPlan,
+    make_coherence,
+)
 from repro.core.locality import LocalityModel, make_affinity
 from repro.core.replication import HotKeyReplicator, make_replication
 from repro.core.traffic import ArrivalProcess, TrafficStats, make_traffic
@@ -120,6 +129,7 @@ from repro.core.tools import (
     ToolRegistry,
     ToolSpec,
     make_admission_tool,
+    make_coherence_tool,
     make_recovery_tool,
     make_replication_tool,
 )
@@ -445,6 +455,7 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
                             events: EventQueue,
                             locality: Optional[LocalityModel] = None,
                             faults: Optional["FaultRuntime"] = None,
+                            coherence: Optional["CoherenceRuntime"] = None,
                             ) -> List[ToolSpec]:
     """Per-session ``read_cache`` / ``load_db`` bound to the shared router.
 
@@ -482,8 +493,23 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
     locality.remote_reads == routed``). At ``remote_read_penalty == 1.0``
     the hop is exactly zero and every trace is bit-identical to the
     affinity-free engine (tests/test_locality.py).
+
+    With a :class:`CoherenceRuntime` wired (a MutationPlan — ISSUE 8),
+    every consume passes a **checkpoint** comparing the serving copy's
+    version against the key's current datastore version. A demand load
+    serializes its read at the *issue* instant (a write landing during the
+    dwell serializes after it — the value is fresh by definition at
+    consume). A version-lagged copy asks the policy: ``serve_stale`` keeps
+    the normal path (the access stays in its invariant bucket, counted as
+    a ``stale_reads`` sub-bucket); ``refresh`` issues one more logical
+    access as an authoritative DB read (``routed`` + ``remote_loads``,
+    marked ``refresh_loads``) through the same FCFS contention the demand
+    path uses. Whatever the policy answers, serving past ``bound_s`` is
+    clamped to refresh — the staleness contract is a hard property.
+    ``coherence=None`` (no MutationPlan) skips every check bit-identically.
     """
     stats = session.stats
+    coh = coherence
 
     def _consume(key: str, pod: str, size_mb: float) -> None:
         # consumer-side locality charge, called exactly once per logical
@@ -514,6 +540,87 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
         contention.credit_overlap(
             rec.pod, min(consume_t, rec.completes_at) - rec.issued_at)
 
+    def _refresh(key: str, current: int, served_pod: str):
+        """Coherence-forced reload: one more logical access served by an
+        authoritative DB read on the owner's bandwidth (same acquire/stall
+        accounting as a demand load, flagged ``refresh_loads``). The
+        reloaded frame re-freshens what it can reach: a live in-flight
+        record is version-stamped (frames are content-immutable, so the
+        landing fill now carries current data), an existing cached copy is
+        stamped in place, and a missing copy registers a normal in-flight
+        fill that joiners share."""
+        frame = store.peek(key)
+        now = clock.now()
+        store.loads += 1
+        router.stats.routed += 1
+        router.stats.remote_loads += 1
+        router.stats.refresh_loads += 1
+        router.note_access(key, now)
+        pod = router.owner(key)
+        service = clock.latency.db_load(frame.size_mb)
+        dwell = contention.acquire(pod, now, service)
+        stall = dwell - service
+        if stall > 0:
+            stats.stalled_loads += 1
+            stats.stall_s += stall
+        if faults is not None:
+            faults.note_access(0.0, now)
+        rec = router.in_flight.get(key)
+        if rec is not None:
+            rec.version = max(rec.version, current)
+        else:
+            entry = router.pods[served_pod].entry(key)
+            if entry is not None:
+                entry.version = current
+            else:
+                router.start_load(key, frame, frame.size_bytes,
+                                  issued_at=now, completes_at=now + dwell,
+                                  prefetched=False)
+                events.push(now + dwell, PRI_FINISH, payload=key)
+                if faults is not None:
+                    faults.note_waiter(key, session)
+        clock.advance(dwell)
+        _consume(key, pod, frame.size_mb)
+        return frame
+
+    def _checkpoint(key: str, version: int, served_pod: str):
+        """Consume checkpoint (ISSUE 8): prove what this access serves.
+        Returns ``None`` to serve the copy as-is (fresh, or stale within
+        its declared bound) or the authoritative frame when the policy
+        orders a refresh — in which case the caller returns it INSTEAD of
+        charging the copy's read cost."""
+        current = coh.current_version(key)
+        now = clock.now()
+        coh.note_time(now)
+        if version >= current:
+            coh.stats.fresh_reads += 1
+            return None
+        staleness = coh.staleness_of(key, version, now)
+        pol = coh.policy
+        freq = (int(router.sketch.estimate_peek(key))
+                if router.sketch is not None else 0)
+        # TTL is enforced on staleness, which lower-bounds age (the missed
+        # write postdates the install): the declared bound still holds and
+        # the check needs no sim-time fill clock in the pod caches
+        decision = pol.on_stale_read(key, staleness, staleness, freq)
+        if decision == SERVE_STALE and staleness > pol.bound_s:
+            coh.stats.clamped += 1
+            decision = REFRESH
+        if decision == SERVE_STALE:
+            coh.stats.stale_reads += 1
+            router.stats.stale_reads += 1
+            if staleness > coh.stats.max_staleness_s:
+                coh.stats.max_staleness_s = staleness
+            coh.ledger.append((now, key, version, current, staleness,
+                               SERVE_STALE))
+            return None
+        base = getattr(pol, "base", pol)
+        if base.expired(staleness):
+            coh.stats.expired_reads += 1
+        coh.stats.refresh_reads += 1
+        coh.ledger.append((now, key, version, current, staleness, REFRESH))
+        return _refresh(key, current, served_pod)
+
     def read_cache(key: str):
         owner_pod = router.owner(key)
         if locality is not None:
@@ -537,6 +644,11 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
         router.note_access(key, clock.now())
         if faults is not None:
             faults.note_access(1.0, clock.now())
+        if coh is not None:
+            fresh = _checkpoint(key, router.pods[pod].entry(key).version,
+                                pod)
+            if fresh is not None:
+                return fresh
         clock.advance(clock.latency.cache_read(value.size_mb))
         _consume(key, pod, value.size_mb)
         return value
@@ -547,6 +659,17 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
         router.note_access(key, now)
         rec = router.in_flight.get(key)
         if rec is not None:                       # 1. join an in-flight load
+            if coh is not None:
+                # a fill issued before a write is version-lagged: a joiner
+                # arriving AFTER the write serializes after it too, so it
+                # checkpoints here (the issuer serialized at issue and is
+                # fresh by definition). A refresh re-reads authoritatively
+                # instead of joining — and re-stamps the fill, which now
+                # carries current (content-identical) data.
+                fresh = _checkpoint(key, rec.version, rec.pod)
+                if fresh is not None:
+                    session.prefetched.pop(key, None)
+                    return fresh
             session.prefetched.pop(key, None)
             wait = max(0.0, rec.completes_at - now)
             rec.joiners += 1
@@ -581,6 +704,11 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
             _credit_once(own, now)
             if faults is not None:
                 faults.note_access(1.0, now)
+            if coh is not None:
+                fresh = _checkpoint(
+                    key, router.pods[pod].entry(key).version, pod)
+                if fresh is not None:
+                    return fresh
             clock.advance(clock.latency.cache_read(value.size_mb))
             _consume(key, pod, value.size_mb)
             return value
@@ -595,6 +723,10 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
             _credit_once(own, now)
             if faults is not None:
                 faults.note_access(0.0, now)
+            if coh is not None:
+                fresh = _checkpoint(key, own.version, own.pod)
+                if fresh is not None:
+                    return fresh
             clock.advance(clock.latency.cache_read(own.value.size_mb))
             _consume(key, own.pod, own.value.size_mb)
             return own.value
@@ -620,6 +752,12 @@ def make_shared_cache_tools(router: PodLocalCacheRouter, store: GeoDataStore,
             # before completes_at, this session retries against the new
             # rendezvous owner (bounded backoff, then DB bypass)
             faults.note_waiter(key, session)
+        if coh is not None:
+            # serialization-at-issue: the read serializes at its issue
+            # instant, so a write landing during the dwell serializes
+            # after it — the consumed value is fresh by definition
+            coh.note_time(now)
+            coh.stats.fresh_reads += 1
         clock.advance(dwell)
         _consume(key, pod, frame.size_mb)
         return frame
@@ -1086,6 +1224,87 @@ class FaultRuntime:
         return p95(inside), p95(outside)
 
 
+class CoherenceRuntime:
+    """Write path + coherence bookkeeping for one episode (ISSUE 8).
+
+    Owns the per-key version counters and mutation timestamps the consume
+    checkpoints compare against, applies each :class:`MutationEvent` of
+    the engine's :class:`MutationPlan` (scheduled at ``PRI_FAULT``, like
+    membership changes), and runs the policy's write-time fan-out:
+    write-invalidate purges every live copy (owner, replicas, and —
+    via the router's ``fresh_fills_only`` guard — superseded in-flight
+    fills), write-through stamps the new version into every live copy and
+    any in-flight fill (frames are content-immutable, so the stamp IS the
+    refresh), and the bounded policies only book the copies that just
+    went version-lagged (readers decide at consume time).
+
+    The ``ledger`` records every version-lagged consume as
+    ``(t, key, served_version, current_version, staleness_s, verdict)`` —
+    the "prove what it served" audit trail the property tests replay.
+    ``clock_now`` tracks the max sim time observed across writes and
+    consumes (monotone; the ``cache_update`` probe's time source)."""
+
+    def __init__(self, engine: "ConcurrentEpisodeEngine",
+                 plan: MutationPlan, policy):
+        self.engine = engine
+        self.router = engine.router
+        self.plan = plan
+        self.policy = policy
+        self.versions: Dict[str, int] = {}
+        self.mutation_times: Dict[str, List[float]] = {}
+        self.stats = CoherenceStats()
+        self.ledger: List[tuple] = []
+        self._now = 0.0
+
+    # -- the surface the consume checkpoints + cache_update probe use --------
+    def current_version(self, key: str) -> int:
+        return self.versions.get(key, 0)
+
+    def staleness_of(self, key: str, version: int, now: float) -> float:
+        """Seconds since the FIRST write the copy at ``version`` missed —
+        how long the consumer has been able to observe newer data."""
+        times = self.mutation_times.get(key)
+        if not times or version >= len(times):
+            return 0.0
+        return max(0.0, now - times[version])
+
+    def clock_now(self) -> float:
+        return self._now
+
+    def note_time(self, now: float) -> None:
+        if now > self._now:
+            self._now = now
+
+    # -- the write path ------------------------------------------------------
+    def apply(self, t: float, mev: MutationEvent) -> None:
+        self.note_time(t)
+        key = mev.key
+        self.mutation_times.setdefault(key, []).append(t)
+        version = len(self.mutation_times[key])
+        self.versions[key] = version
+        st = self.stats
+        st.mutations += 1
+        if mev.kind == ARRIVAL:
+            st.arrivals += 1
+        else:
+            st.updates += 1
+        pol = self.policy
+        if pol.invalidate_on_write:
+            st.invalidations += self.router.invalidate_copies(key)
+        elif pol.refresh_on_write:
+            st.writethroughs += self.router.refresh_copies(key, version)
+            rec = self.router.in_flight.get(key)
+            if rec is not None:
+                # write-through reaches the in-flight fill too: the landing
+                # value is content-identical to the new version, so the
+                # stamp makes the install current (never superseded)
+                rec.version = version
+        else:
+            # bounded staleness: copies stay; replica copies that just went
+            # version-lagged still feed the replicator's demotion pressure
+            self.router.stale_copies(key)
+
+
 @dataclasses.dataclass
 class EpisodeMetrics:
     n_sessions: int
@@ -1186,6 +1405,28 @@ class EpisodeMetrics:
     traffic_mean_sojourn_s: float = 0.0
     traffic_mean_in_system: float = 0.0
     traffic_little_residual: float = 0.0
+    # mutable-data-plane / coherence accounting (ISSUE 8; all zero / 1.0
+    # without a MutationPlan). stale_reads are consumes that served a
+    # version-lagged copy within its declared bound (a sub-bucket of the
+    # routed-invariant buckets); refresh_loads are the authoritative
+    # reloads a refresh verdict forced (a sub-bucket of remote_loads);
+    # superseded_fills are in-flight fills outdated by a write and refused
+    # install under a zero-staleness policy; max_staleness_s is the worst
+    # staleness any consume ever served (the bounded-staleness contract
+    # caps it at the policy bound); agreement/tokens are the GPT-driven
+    # cache_update path's grading and decision cost (off the critical
+    # path, like admission/replication/recovery)
+    coherence_mutations: int = 0
+    coherence_invalidations: int = 0
+    coherence_writethroughs: int = 0
+    coherence_stale_reads: int = 0
+    coherence_refresh_loads: int = 0
+    coherence_superseded_fills: int = 0
+    coherence_clamped: int = 0
+    coherence_stale_share: float = 0.0
+    coherence_max_staleness_s: float = 0.0
+    coherence_agreement: float = 1.0
+    coherence_tokens: int = 0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -1197,6 +1438,9 @@ class EpisodeResult:
     sessions: List[Session]
     router: PodLocalCacheRouter
     contention: PodContention
+    # the episode's coherence runtime (None without a MutationPlan): the
+    # property tests replay its ledger/versions against the contract
+    coherence: Optional[CoherenceRuntime] = None
 
     def evaluate_answers(self) -> Report:
         """Answer-quality aggregate over every session's tasks/traces
@@ -1246,7 +1490,11 @@ class ConcurrentEpisodeEngine:
                  autoscale: bool = False,
                  autoscale_kw: Optional[Dict] = None,
                  fault_kw: Optional[Dict] = None,
-                 traffic=None):
+                 traffic=None,
+                 mutations: Optional[MutationPlan] = None,
+                 coherence: Optional[str] = None,
+                 coherence_impl: str = "python",
+                 coherence_kw: Optional[Dict] = None):
         assert n_sessions >= 1 and n_pods >= 1
         if capacity_per_pod < 1:
             raise ValueError(
@@ -1330,6 +1578,37 @@ class ConcurrentEpisodeEngine:
                 impl=recovery_impl, llm=rec_llm, few_shot=few_shot,
                 **(recovery_kw or {}))
         self._faults = None
+
+        # mutable data plane (ISSUE 8): a sim-time MutationPlan versions
+        # datastore keys; the coherence policy decides what every cached
+        # copy's version lag means — at write time (invalidate / push) or
+        # at consume time (bounded staleness, optionally GPT-driven).
+        # ``mutations=None`` AND ``coherence=None`` skip the layer
+        # entirely (bit-identical replay of the immutable-store engine —
+        # the degeneracy contract tests/test_coherence.py locks down); an
+        # EMPTY (non-None) MutationPlan runs with every hook live but
+        # mutates nothing. The runtime itself is built per run().
+        self.mutation_plan = None
+        self.coherence_policy = None
+        self._coherence = None
+        if mutations is not None or coherence is not None:
+            if mutations is not None and not isinstance(mutations,
+                                                        MutationPlan):
+                raise ValueError(
+                    f"mutations must be a MutationPlan or None, got "
+                    f"{type(mutations).__name__}")
+            self.mutation_plan = (mutations if mutations is not None
+                                  else MutationPlan())
+            coh_llm = (SimLLM(self.profile, seed=seed + 433003)
+                       if coherence_impl == "llm" else None)
+            self.coherence_policy = make_coherence(
+                coherence or "write-invalidate", impl=coherence_impl,
+                llm=coh_llm, few_shot=few_shot, **(coherence_kw or {}))
+        elif coherence_impl != "python" or coherence_kw:
+            raise ValueError(
+                "coherence_impl/coherence_kw require a mutable data plane "
+                "(pass mutations=MutationPlan(...) and/or a coherence "
+                "policy name)")
 
         # cross-session admission: ONE policy + ONE frequency sketch shared
         # by every pod and session (key popularity is global). The sketch
@@ -1431,7 +1710,8 @@ class ConcurrentEpisodeEngine:
             make_shared_cache_tools(self.router, self.store, self.contention,
                                     clock, session, events,
                                     locality=self.locality,
-                                    faults=self._faults)
+                                    faults=self._faults,
+                                    coherence=self._coherence)
             + make_geo_tools(clock))
         if self.recovery_policy is not None:
             # post-failover recovery as a callable cache op (like
@@ -1439,6 +1719,13 @@ class ConcurrentEpisodeEngine:
             # re-warm/lazy verdict for a key without consuming a decision
             registry.register(make_recovery_tool(self.recovery_policy,
                                                  self.sketch))
+        if self._coherence is not None:
+            # coherence as a callable cache op (the paper's cache-update
+            # op surfaced as a tool, like cache_admit / cache_replicate):
+            # probe the fresh/refresh/serve_stale verdict for a key
+            # without consuming a decision or LLM tokens
+            registry.register(make_coherence_tool(self._coherence,
+                                                  self.sketch))
         if self.replicator is not None:
             # replication as a callable cache op (like cache_admit): the
             # agent/controller can query the replicate/drop/hold verdict
@@ -1677,6 +1964,24 @@ class ConcurrentEpisodeEngine:
                                         **self.fault_kw)
             for fev in (self.fault_plan or ()):
                 events.push(fev.at, PRI_FAULT, payload=fev)
+        # coherence runtime (ISSUE 8): writes enter the heap at PRI_FAULT —
+        # a mutation at a completion's instant wins, so the fill observes
+        # the write (superseded / re-stamped) exactly like a pod failing
+        # at that instant would abort it. Seeded after fault events, so a
+        # same-instant (fault, mutation) pair applies fault-first
+        # (deterministic push-order tie-break).
+        if self.mutation_plan is not None:
+            self._coherence = CoherenceRuntime(self, self.mutation_plan,
+                                               self.coherence_policy)
+            self.router.version_of = self._coherence.current_version
+            # zero-staleness policies must never install a fill a write
+            # outdated mid-flight; bounded policies install it (readers
+            # decide at consume time)
+            self.router.fresh_fills_only = (
+                self.coherence_policy.invalidate_on_write
+                or self.coherence_policy.refresh_on_write)
+            for mev in self.mutation_plan:
+                events.push(mev.at, PRI_FAULT, payload=mev)
         tstats = None
         if self.traffic is None:
             sessions = [self._make_session(sid, tasks_per_session,
@@ -1716,6 +2021,7 @@ class ConcurrentEpisodeEngine:
         replicator = self.replicator
         faults = self._faults
         scaler = self.autoscaler
+        coherence = self._coherence
         n_events = n_steps = 0
         while events:
             t, payload = pop()
@@ -1762,6 +2068,12 @@ class ConcurrentEpisodeEngine:
                     # session departure: pure ledger, no clock moves
                     tstats.note_retire(t, payload.sid)
                     continue
+                elif cls is MutationEvent:
+                    # datastore write (ISSUE 8): version the key and run
+                    # the policy's fan-out before any same-instant
+                    # completion installs or session consumes
+                    coherence.apply(t, payload)
+                    continue
                 else:
                     # membership change (FaultEvent) or retry (RetryEvent)
                     faults.handle(t, payload)
@@ -1790,7 +2102,8 @@ class ConcurrentEpisodeEngine:
         self._profile(sessions, n_events, n_steps)
         return EpisodeResult(metrics=self._metrics(sessions),
                              sessions=sessions, router=self.router,
-                             contention=self.contention)
+                             contention=self.contention,
+                             coherence=self._coherence)
 
     def _profile(self, sessions: List[Session], n_events: int,
                  n_steps: int) -> None:
@@ -1828,6 +2141,8 @@ class ConcurrentEpisodeEngine:
         recovery_s, unrecovered = fr.recovery_stats() if fr else (0.0, 0)
         fo_p95, steady_p95 = fr.attributed_p95() if fr else (0.0, 0.0)
         rec_pol = self.recovery_policy
+        coh = self._coherence
+        cpol = self.coherence_policy
         return EpisodeMetrics(
             n_sessions=self.n_sessions,
             n_pods=self.n_pods,
@@ -1926,6 +2241,19 @@ class ConcurrentEpisodeEngine:
                                     if ts else 0.0),
             traffic_little_residual=(ts.little_residual(float(makespan))
                                      if ts else 0.0),
+            coherence_mutations=coh.stats.mutations if coh else 0,
+            coherence_invalidations=coh.stats.invalidations if coh else 0,
+            coherence_writethroughs=coh.stats.writethroughs if coh else 0,
+            coherence_stale_reads=rstats.stale_reads,
+            coherence_refresh_loads=rstats.refresh_loads,
+            coherence_superseded_fills=rstats.superseded_fills,
+            coherence_clamped=coh.stats.clamped if coh else 0,
+            coherence_stale_share=coh.stats.stale_share() if coh else 0.0,
+            coherence_max_staleness_s=(coh.stats.max_staleness_s
+                                       if coh else 0.0),
+            coherence_agreement=getattr(cpol, "agreement", 1.0),
+            coherence_tokens=(getattr(cpol, "prompt_tokens", 0)
+                              + getattr(cpol, "completion_tokens", 0)),
         )
 
 

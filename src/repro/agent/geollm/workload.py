@@ -28,6 +28,19 @@ from repro.agent.geollm import geotools
 WORKING_SET = 5   # matches the cache capacity (5 entries)
 
 
+def mutation_hot_keys(k: int) -> List[str]:
+    """The seed-independent mutation-hot key set (ISSUE 8): the first ``k``
+    keys of the 0x5EED-shuffled key order — the same shuffle
+    ``zipf_global`` / ``affinity_zipf`` use, so every session, every
+    MutationPlan generator, and every benchmark cell agree on WHICH keys
+    are being written without coordinating through seeds."""
+    if k < 1:
+        raise ValueError(f"mutation_hot_keys needs k >= 1, got {k}")
+    order = list(all_keys())
+    random.Random(0x5EED).shuffle(order)
+    return order[:k]
+
+
 @dataclasses.dataclass
 class ToolCall:
     name: str
@@ -152,6 +165,22 @@ class WorkloadSampler:
       pod's sessions share a hot set — but rendezvous hashing owns those
       keys on arbitrary pods, which is exactly what makes consumer-side
       locality (and consumer-targeted replication) matter.
+    * ``"update_heavy"`` — mutation-focused traffic (the mutable-data-plane
+      regime, ISSUE 8): ``hot_p`` of the key draws land on the
+      seed-independent :func:`mutation_hot_keys` set of size ``hot_k`` —
+      the same keys a benchmark-level :class:`MutationPlan` keeps writing
+      — so most reads race recent writes and the coherence policy is on
+      the critical path.
+    * ``"mixed_rw"`` — balanced read/write interleaving: key draws
+      alternate deterministically between the mutation-hot set and the
+      uniform key space (~50/50 regardless of ``hot_p``), the middle
+      ground between ``update_heavy`` and pure-read scenarios.
+    * ``"flash_fresh"`` — flash crowd on fresh data: a hot window of
+      ``hot_k`` consecutive keys in the 0x5EED-shuffled order serves
+      ``hot_p`` of the traffic and advances by one key every
+      ``phase_len`` draws. Paired with a periodic ARRIVAL MutationPlan
+      over the same order, the crowd keeps piling onto keys whose data
+      just changed — worst case for serve-stale bounds.
     """
 
     def __init__(self, reuse_rate: float = 0.8, seed: int = 0,
@@ -165,7 +194,8 @@ class WorkloadSampler:
             raise ValueError(f"reuse_rate must be in [0, 1], "
                              f"got {reuse_rate}")
         if scenario not in ("working", "zipf", "scan", "hotspot",
-                            "affinity_zipf"):
+                            "affinity_zipf", "update_heavy", "mixed_rw",
+                            "flash_fresh"):
             raise ValueError(f"unknown scenario {scenario!r}")
         if zipf_a <= 0.0:
             raise ValueError(f"zipf_a must be > 0, got {zipf_a}")
@@ -210,6 +240,14 @@ class WorkloadSampler:
                 for grp in self._aff_groups]
             self._aff_group = int(group) % g
             self._aff_spill = spill_p
+        if scenario in ("update_heavy", "mixed_rw", "flash_fresh"):
+            # seed-independent shuffle (separate RNG: the "working" draw
+            # stream stays byte-identical): every session AND every
+            # MutationPlan built from mutation_hot_keys() agree on which
+            # keys are write-hot.
+            order = list(self.keys)
+            random.Random(0x5EED).shuffle(order)
+            self._mut_order = order
         self._scan_pos = 0
         self.hot_k, self.hot_p, self.phase_len = hot_k, hot_p, phase_len
         self._hot: List[str] = []
@@ -232,6 +270,24 @@ class WorkloadSampler:
             key = self.keys[self._scan_pos % len(self.keys)]
             self._scan_pos += 1
             return key
+        if self.scenario == "update_heavy":
+            if self.rng.random() < self.hot_p:
+                return self.rng.choice(self._mut_order[:self.hot_k])
+            return self.rng.choice(self.keys)
+        if self.scenario == "mixed_rw":
+            self._draws += 1
+            if self._draws % 2:       # deterministic ~50/50 interleave
+                return self.rng.choice(self._mut_order[:self.hot_k])
+            return self.rng.choice(self.keys)
+        if self.scenario == "flash_fresh":
+            w = self._draws // self.phase_len   # window advances per phase
+            self._draws += 1
+            if self.rng.random() < self.hot_p:
+                n = len(self._mut_order)
+                win = [self._mut_order[(w + i) % n]
+                       for i in range(self.hot_k)]
+                return self.rng.choice(win)
+            return self.rng.choice(self.keys)
         if self.scenario == "hotspot":
             if self._draws % self.phase_len == 0:
                 self._hot = self.rng.sample(self.keys, self.hot_k)

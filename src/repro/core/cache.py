@@ -26,6 +26,10 @@ class CacheEntry:
     last_access: float
     access_count: int = 0
     insert_order: int = 0
+    # datastore version this copy was read at (ISSUE-8 mutable data plane).
+    # 0 everywhere until a MutationPlan is wired; the coherence layer
+    # compares it against the key's current version at every consume.
+    version: int = 0
 
 
 @dataclasses.dataclass
@@ -110,8 +114,13 @@ class DataCache:
         return e.value
 
     # -- updates ------------------------------------------------------------
+    def entry(self, key: str) -> Optional[CacheEntry]:
+        """The live entry object (or None) WITHOUT touching recency or
+        frequency metadata — the coherence layer's version/age probe."""
+        return self._entries.get(key)
+
     def put(self, key: str, value: Any, size_bytes: int = 0,
-            victim: Optional[str] = None) -> Optional[str]:
+            victim: Optional[str] = None, version: int = 0) -> Optional[str]:
         """Insert ``key``; if full, evict ``victim`` (caller-chosen — the
         controller decides, per the paper's prompt-driven update policy).
         Returns the evicted key, if any."""
@@ -131,7 +140,8 @@ class DataCache:
             key=key, value=value, size_bytes=size_bytes, created_at=now,
             last_access=now,
             access_count=prev.access_count if prev else 0,
-            insert_order=prev.insert_order if prev else self._insert_counter)
+            insert_order=prev.insert_order if prev else self._insert_counter,
+            version=version)
         self.stats.puts += 1
         return evicted
 

@@ -79,6 +79,19 @@ class RoutingStats:
     timeout_loads: int = 0
     scale_outs: int = 0
     scale_ins: int = 0
+    # coherence accounting (all zero without a MutationPlan — ISSUE 8):
+    # ``stale_reads`` counts logical accesses that consumed a version-lagged
+    # copy under a bounded-staleness policy (a sub-bucket of
+    # local_hits/joined_in_flight/bypass_reads — the access still lands in
+    # its normal invariant bucket); ``refresh_loads`` counts physical
+    # reloads forced by a coherence verdict (a sub-bucket of remote_loads:
+    # the logical access routes as a remote load AND is marked a refresh);
+    # ``superseded_fills`` counts in-flight fills whose version was
+    # outdated by a write before completion and that a zero-staleness
+    # policy therefore refused to install
+    stale_reads: int = 0
+    refresh_loads: int = 0
+    superseded_fills: int = 0
 
 
 @dataclasses.dataclass
@@ -98,6 +111,11 @@ class InFlightLoad:
     installed: bool = False   # completion installed it into the pod cache
     bypassed: bool = False    # completion was rejected by admission
     aborted: bool = False     # the serving pod died before completes_at
+    # datastore version the read serialized at (its issue instant). A write
+    # landing mid-flight leaves this behind the key's current version; the
+    # coherence layer decides at consume/install time what that means.
+    version: int = 0
+    superseded: bool = False  # outdated mid-flight; fill not installed
 
 
 @dataclasses.dataclass
@@ -172,6 +190,18 @@ class PodLocalCacheRouter:
         # behavior; with a model whose penalty > 1, ``locate`` becomes
         # cheapest-first and ``replicate`` targets consumer pods.
         self.locality = None
+        # mutable-data-plane hooks (ISSUE 8), all inert without mutations:
+        # ``version_of`` maps key -> current datastore version (None means
+        # the store is immutable and every copy is version 0 forever);
+        # ``fresh_fills_only`` is set by the zero-staleness policies
+        # (write-invalidate / write-through) so a fill outdated mid-flight
+        # is never installed; ``replica_stale_counts`` accumulates, per
+        # key, how many REPLICA copies a mutation staled out — the
+        # HotKeyReplicator's coherence-churn demotion feed (drained each
+        # epoch, like demand_counts/replica_reads).
+        self.version_of: Optional[Callable[[str], int]] = None
+        self.fresh_fills_only = False
+        self.replica_stale_counts: Dict[str, int] = {}
 
     # -- membership ----------------------------------------------------------
     def _purge_pod(self, pod_id: str) -> FailoverReport:
@@ -324,7 +354,7 @@ class PodLocalCacheRouter:
             self.sketch.touch(key, now)
 
     def install(self, pod: str, key: str, value: object,
-                size_bytes: int) -> bool:
+                size_bytes: int, version: int = 0) -> bool:
         """Install a loaded value into ``pod``'s cache, evicting per the
         pod's policy when full (shared by ``fetch`` and the concurrent
         engine's load path, so eviction semantics cannot diverge).
@@ -351,7 +381,7 @@ class PodLocalCacheRouter:
                         self.spill(key, value, size_bytes)
                     return False
                 self.stats.admitted += 1
-        cache.put(key, value, size_bytes, victim=victim)
+        cache.put(key, value, size_bytes, victim=victim, version=version)
         return True
 
     # -- hot-key replication --------------------------------------------------
@@ -423,8 +453,10 @@ class PodLocalCacheRouter:
         if fanout is not None:
             candidates = candidates[:fanout]
         installed = 0
+        ver = self.version_of(key) if self.version_of is not None else 0
         for _, _, p, victim in candidates:
-            self.pods[p].put(key, value, size_bytes, victim=victim)
+            self.pods[p].put(key, value, size_bytes, victim=victim,
+                             version=ver)
             pods = self.replicas.setdefault(key, [])
             if p not in pods:
                 pods.append(p)
@@ -443,6 +475,64 @@ class PodLocalCacheRouter:
                 self.stats.replica_drops += 1
         return dropped
 
+    # -- coherence fan-out (ISSUE 8; every method a no-op on a key with no
+    # live copies, so the mutation-free engine never reaches this code) ------
+    def _note_replica_stale(self, key: str) -> None:
+        self.replica_stale_counts[key] = (
+            self.replica_stale_counts.get(key, 0) + 1)
+
+    def invalidate_copies(self, key: str) -> int:
+        """Write-invalidate fan-out: purge EVERY live copy of ``key`` —
+        owner resident and every replica the HotKeyReplicator placed —
+        and untrack its replica list (dead pods' copies were already
+        destroyed with the pod, so they cannot serve stale either).
+        Replica purges feed ``replica_stale_counts`` (demotion pressure:
+        a copy that keeps getting invalidated is not earning its slot).
+        Returns the number of copies purged."""
+        owner = self.owner(key)
+        purged = 0
+        for p, cache in self.pods.items():
+            if self.alive.get(p, False) and cache.drop(key):
+                purged += 1
+                if p != owner:
+                    self._note_replica_stale(key)
+        self.replicas.pop(key, None)
+        return purged
+
+    def refresh_copies(self, key: str, version: int) -> int:
+        """Write-through fan-out: push ``version`` into every live copy in
+        place (the writer pays per copy; values are content-identical in
+        the sim, so the version stamp IS the refresh). Replica refreshes
+        still count as coherence churn for the demotion feed. Returns the
+        number of copies refreshed."""
+        owner = self.owner(key)
+        refreshed = 0
+        for p, cache in self.pods.items():
+            if not self.alive.get(p, False):
+                continue
+            e = cache.entry(key)
+            if e is not None:
+                e.version = version
+                refreshed += 1
+                if p != owner:
+                    self._note_replica_stale(key)
+        return refreshed
+
+    def stale_copies(self, key: str) -> int:
+        """Bounded-staleness bookkeeping at write time: copies stay in
+        place (readers decide at consume time) but replica copies that
+        just went version-lagged still count demotion pressure. Returns
+        the number of live copies now lagging."""
+        owner = self.owner(key)
+        lagging = 0
+        for p, cache in self.pods.items():
+            if not self.alive.get(p, False) or key not in cache:
+                continue
+            lagging += 1
+            if p != owner:
+                self._note_replica_stale(key)
+        return lagging
+
     # -- async completion -----------------------------------------------------
     def start_load(self, key: str, value: object, size_bytes: int, *,
                    issued_at: float, completes_at: float,
@@ -457,7 +547,9 @@ class PodLocalCacheRouter:
         assert key not in self.in_flight, f"{key} already in flight"
         rec = InFlightLoad(key=key, pod=self.owner(key), issued_at=issued_at,
                            completes_at=completes_at, value=value,
-                           size_bytes=size_bytes, prefetched=prefetched)
+                           size_bytes=size_bytes, prefetched=prefetched,
+                           version=(self.version_of(key)
+                                    if self.version_of is not None else 0))
         self.in_flight[key] = rec
         if prefetched:
             self.stats.prefetch_issued += 1
@@ -471,8 +563,18 @@ class PodLocalCacheRouter:
         scheduler when sim time reaches ``completes_at``."""
         rec = self.in_flight.pop(key)
         if self.alive.get(rec.pod, False):
+            if (self.fresh_fills_only and self.version_of is not None
+                    and rec.version < self.version_of(key)):
+                # a write outdated this fill mid-flight and the policy
+                # forbids stale installs: the value still streams to its
+                # waiters (their reads serialized before the write) but
+                # nothing lands in the cache — the next read re-fetches
+                rec.superseded = True
+                self.stats.superseded_fills += 1
+                return rec
             rec.installed = self.install(rec.pod, rec.key, rec.value,
-                                         rec.size_bytes)
+                                         rec.size_bytes,
+                                         version=rec.version)
             rec.bypassed = not rec.installed
         return rec
 

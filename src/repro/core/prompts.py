@@ -229,6 +229,51 @@ def recovery_decision_prompt(policy_text: str, key: str, freq: int,
     return "".join(parts)
 
 
+COHERENCE_FEWSHOT = """Example 1:
+Coherence policy: serve a stale cached copy while its staleness is at most 20 seconds; refresh now once the staleness exceeds 20 seconds.
+Key: xview1-2022 (staleness: 7.5s; staleness bound: 20s; estimated frequency: 9)
+Thought: the copy lags the store by well under the bound — serving it keeps the hot read stream off the database, and the contract still holds.
+Answer: {"decision": "serve_stale"}
+
+Example 2:
+Coherence policy: serve a stale cached copy while its staleness is at most 20 seconds; refresh now once the staleness exceeds 20 seconds.
+Key: modis-2016 (staleness: 31.2s; staleness bound: 20s; estimated frequency: 2)
+Thought: the copy is past the declared bound; serving it would break the freshness contract — pay the reload now.
+Answer: {"decision": "refresh"}
+"""
+
+
+def coherence_decision_prompt(policy_text: str, key: str, staleness_s: float,
+                              bound_s: float, freq: int,
+                              few_shot: bool) -> str:
+    """Prompt for the GPT-driven ``cache_update`` decision (ISSUE 8): the
+    datastore has newer data for ``key`` than the cached copy a session is
+    about to consume. Decide REFRESH (reload from the database now — the
+    reader pays the load) or SERVE_STALE (serve the lagging copy, allowed
+    only within the policy's declared staleness bound — the engine clamps
+    anything beyond it)."""
+    parts = [SYSTEM_HEADER,
+             "You are now the cache COHERENCE controller. The database was "
+             "UPDATED after the cached copy of ONE key was installed, so "
+             "the copy is stale by the staleness shown below. Decide "
+             "whether the session about to consume it should REFRESH "
+             "(reload from the database now, paying the load) or "
+             "SERVE_STALE (use the lagging copy — permitted only while its "
+             "staleness is within the declared bound). Apply the coherence "
+             "policy below.\n",
+             f"Coherence policy: {policy_text}\n"]
+    if few_shot:
+        parts.append(COHERENCE_FEWSHOT)
+    parts.append(f"Key: {key} (staleness: {staleness_s:.1f}s; staleness "
+                 f"bound: {bound_s:g}s; estimated frequency: {freq})\n")
+    parts.append(f'Evidence (JSON): {{"staleness_s": {staleness_s:.3f}, '
+                 f'"bound_s": {bound_s:g}}}\n')
+    parts.append('Respond with a JSON object: {"decision": "refresh"} or '
+                 '{"decision": "serve_stale"}.\n')
+    parts.append("Answer (JSON): ")
+    return "".join(parts)
+
+
 def parse_json_tail(text: str):
     """Parse the trailing JSON object/list from an LLM completion."""
     text = text.strip()

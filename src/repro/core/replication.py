@@ -215,8 +215,9 @@ class HotKeyReplicator:
                  top_k: int = 8, max_replicated: int = 4,
                  epoch_s: float = 60.0, fanout: Optional[int] = 1,
                  miss_min: int = 2, gain_ratio: float = 2.0,
-                 durability: bool = False):
+                 durability: bool = False, stale_demote_min: int = 2):
         assert epoch_s > 0
+        assert stale_demote_min >= 1
         self.router = router
         self.sketch = sketch
         self.value_of = value_of
@@ -230,7 +231,26 @@ class HotKeyReplicator:
         self.durability = durability      # also judge hot RESIDENT keys
         self.next_epoch = epoch_s
         self.replicated: Dict[str, int] = {}     # key -> promote epoch index
+        # coherence-churn demotion (ISSUE 8, the ROADMAP's "replication
+        # earns its demotion path"): the router counts, per key, every
+        # replica copy a mutation staled out (``replica_stale_counts``).
+        # That churn is folded into a decaying ``stale_pressure`` score
+        # each epoch (halved after use, so the ban lifts once the write
+        # stream cools); a replicated key at or above ``stale_demote_min``
+        # is demoted past its grace epoch, and a key under pressure is
+        # vetoed from (re-)promotion — a copy that keeps going stale pays
+        # invalidation fan-out every write and serves nothing for it.
+        # Always empty without a MutationPlan (digest-locked no-op).
+        self.stale_demote_min = stale_demote_min
+        self.stale_pressure: Dict[str, int] = {}
         self.stats = ReplicationStats()
+
+    def _stale_pressure(self, key: str) -> int:
+        """Current coherence churn on ``key``'s replicas: the decayed
+        cross-epoch score plus churn accumulated since the last epoch
+        (``offer`` runs between epochs and must see live pressure)."""
+        return (self.stale_pressure.get(key, 0)
+                + self.router.replica_stale_counts.get(key, 0))
 
     def _locality(self):
         """The router's locality model when it actually penalizes remote
@@ -277,6 +297,8 @@ class HotKeyReplicator:
             return False
         if self._demand(key) < self.miss_min:
             return False                 # one-shot traffic: not worth a slot
+        if self._stale_pressure(key) >= self.stale_demote_min:
+            return False                 # keeps going stale: no re-promote
         freq = self.sketch.estimate(key)
         # spill decisions run between epochs: refresh the prompt's
         # "hottest keys right now" (+ consumer demand) evidence so the
@@ -308,6 +330,11 @@ class HotKeyReplicator:
         st = self.stats
         st.epochs += 1
         self._sync_llm_evidence()
+        # fold the epoch's coherence churn into the decaying pressure score
+        # (drained here like demand_counts/replica_reads; see __init__)
+        for key, n in self.router.replica_stale_counts.items():
+            self.stale_pressure[key] = self.stale_pressure.get(key, 0) + n
+        self.router.replica_stale_counts.clear()
         # demote pass: re-judge every replicated key against the aged
         # sketch, then apply the *utility veto* — a replica that served no
         # reads for a full epoch (grace: the epoch it was promoted in) is
@@ -322,6 +349,11 @@ class HotKeyReplicator:
             grace = self.replicated[key] == st.epochs - 1
             if decision != "drop" and not grace and not used.get(key, 0):
                 decision = "drop"
+            if (decision != "drop" and not grace
+                    and self.stale_pressure.get(key, 0)
+                    >= self.stale_demote_min):
+                decision = "drop"        # coherence churn: copies keep
+                                         # going stale under the write load
             if decision == "drop":
                 st.copies_dropped += self.router.drop_replica(key)
                 del self.replicated[key]
@@ -376,6 +408,8 @@ class HotKeyReplicator:
         for key, miss_n in feed[:self.top_k]:
             if miss_n < self.miss_min or key in self.replicated:
                 continue
+            if self.stale_pressure.get(key, 0) >= self.stale_demote_min:
+                continue                 # keeps going stale: no re-promote
             if len(self.replicated) >= self.max_replicated:
                 break
             freq = self.sketch.estimate(key)
@@ -408,6 +442,8 @@ class HotKeyReplicator:
             for key, _est in self.sketch.top_k(self.top_k):
                 if key in self.replicated:
                     continue
+                if self.stale_pressure.get(key, 0) >= self.stale_demote_min:
+                    continue             # churned-out copies aren't durable
                 if len(self.replicated) >= self.max_replicated:
                     break
                 freq = self.sketch.estimate(key)
@@ -424,6 +460,11 @@ class HotKeyReplicator:
                 st.promotes += 1
                 st.copies_installed += copies
                 st.replica_bytes += copies * size
+        # decay the coherence-pressure score (halve per epoch): once the
+        # write stream off a key cools, the promotion ban lifts within a
+        # couple of epochs instead of banning it forever
+        self.stale_pressure = {k: v // 2 for k, v in
+                               self.stale_pressure.items() if v // 2 > 0}
 
     # -- reporting ------------------------------------------------------------
     @property

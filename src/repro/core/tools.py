@@ -207,6 +207,61 @@ def make_recovery_tool(recovery, sketch) -> ToolSpec:
         fn=cache_recover)
 
 
+def make_coherence_tool(runtime, sketch) -> ToolSpec:
+    """Cache coherence as a callable cache op: ``cache_update(key)``
+    answers what the coherence policy would do with the key's cached copy
+    RIGHT NOW — fresh (versions match), refresh (reload before consuming)
+    or serve_stale (the lagging copy is within the declared bound) — with
+    the evidence (current datastore version, the copy's version, its
+    staleness, the bound) the decision is based on.
+
+    This is the paper's *cache update* op surfaced as a tool (the read op
+    has been one since PR 1). Exposed in the same function-calling schema
+    as ``read_cache`` / ``load_db`` / ``cache_admit`` /
+    ``cache_replicate`` / ``cache_recover``. Querying is side-effect-free:
+    real verdicts happen at the consume checkpoint inside the engine's
+    read path, and the probe always answers with the programmatic base
+    rule — a diagnostic must not consume LLM tokens or grading samples."""
+
+    def cache_update(key: str):
+        current = runtime.current_version(key)
+        pol = runtime.policy
+        base = getattr(pol, "base", pol)     # LLM wrapper: probe the rule
+        out = {"key": key, "version": current, "copy_version": None,
+               "decision": "fresh", "staleness_s": 0.0,
+               "bound_s": base.bound_s, "reason": base.name}
+        placed = runtime.router.locate(key)
+        if placed is None:
+            out["reason"] = f"{base.name} (no cached copy)"
+            return out
+        entry = runtime.router.pods[placed].entry(key)
+        out["copy_version"] = entry.version
+        if entry.version >= current:
+            return out
+        now = runtime.clock_now()
+        freq = (int(sketch.estimate_peek(key)) if sketch is not None else 0)
+        staleness = runtime.staleness_of(key, entry.version, now)
+        # the engine enforces TTL on staleness, which lower-bounds age
+        # (the missed write postdates the install) — same contract, no
+        # dependence on the pod caches' tick-order recency clock
+        decision = base.on_stale_read(key, staleness, staleness, freq)
+        if decision == "serve_stale" and staleness > base.bound_s:
+            decision = "refresh"             # the engine's hard clamp
+        out.update(decision=decision, staleness_s=round(staleness, 6))
+        return out
+
+    return ToolSpec(
+        name="cache_update",
+        description=("Ask the cache COHERENCE policy what to do with the "
+                     "cached copy of a `dataset-year` key whose data may "
+                     "have been updated in the database since it was "
+                     "cached: serve it as-is (fresh or stale-within-bound) "
+                     "or refresh it from the database before use."),
+        parameters={"key": {"type": "string",
+                            "description": "dataset-year, e.g. xview1-2022"}},
+        fn=cache_update)
+
+
 class ToolRegistry:
     """Function-calling registry: schemas for the prompt, dispatch at runtime."""
 

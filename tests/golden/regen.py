@@ -26,11 +26,13 @@ def _load(name):
 
 loc = _load("test_locality")
 flt = _load("test_faults")
+coh = _load("test_coherence")
 
 for name, builder in (
         ("admission_locality", loc._build_admission_transcript),
         ("replication_locality", loc._build_replication_transcript),
-        ("recovery", flt._build_recovery_transcript)):
+        ("recovery", flt._build_recovery_transcript),
+        ("cache_update", coh._build_coherence_transcript)):
     path = HERE / f"{name}.json"
     transcript = builder()
     path.write_text(json.dumps(transcript, indent=2, sort_keys=True) + "\n")

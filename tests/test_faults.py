@@ -400,3 +400,130 @@ def test_make_recovery_factory():
     assert isinstance(pol, LLMRecovery) and pol.name == "llm-threshold"
     with pytest.raises(AssertionError):
         make_recovery(impl="llm")                    # llm backend required
+
+
+# ---------------------------------------------------------------------------
+# Mutation x fault interplay (ISSUE 8): writes landing across failures
+# ---------------------------------------------------------------------------
+
+def _mutation_fault_episode(policy, plan, mutations, **kw):
+    from repro.core.coherence import MutationPlan
+    assert isinstance(mutations, MutationPlan)
+    return _episode(fault_plan=plan, mutations=mutations, coherence=policy,
+                    replication=True, replication_kw=RKW, **kw)
+
+
+def _assert_no_version_lag(res):
+    """No lost invalidations: at episode end every live cached copy —
+    owner resident, replica, or durability copy — of a mutated key is at
+    the datastore's current version."""
+    coh = res.coherence
+    mutated = {k for k, v in coh.versions.items() if v > 0}
+    assert mutated
+    for pod, cache in res.router.pods.items():
+        for key, entry in cache.entries().items():
+            if key in mutated:
+                assert entry.version >= coh.versions[key], (
+                    pod, key, entry.version, coh.versions[key])
+
+
+def test_pod_fails_mid_invalidation_window():
+    """A pod down while writes invalidate its keys cannot resurrect a
+    stale copy on restore: the failure purged its cache and every
+    post-restore fill is stamped with the current version. Mutations hit
+    the globally hottest keys (the 0x5EED order zipf_global ranks), so
+    the failed pod3 owns most of the written keys."""
+    from repro.core.coherence import MutationPlan
+    from repro.agent.geollm.workload import mutation_hot_keys
+    plan = FaultPlan.single("pod3", 60.0, restore_at=75.0)
+    muts = MutationPlan.periodic(mutation_hot_keys(4), 4.0, start_s=55.0,
+                                 horizon_s=95.0)
+    res = _mutation_fault_episode("write-invalidate", plan, muts)
+    m = res.metrics
+    assert m.resilience_failovers == 1 and m.resilience_restores == 1
+    assert m.coherence_mutations == len(muts)
+    assert m.coherence_stale_reads == 0       # WI safety survives failover
+    assert m.resilience_incomplete_sessions == 0
+    _assert_no_version_lag(res)
+
+
+def test_mutation_during_failover_retry():
+    """Writes landing while aborted loads are in retry backoff: the
+    retried load re-issues against the new owner and its fill carries
+    the post-write version (a version-lagged fill is never installed
+    under write-through — ``superseded_fills`` counts those races)."""
+    from repro.core.coherence import MutationPlan
+    from repro.agent.geollm.workload import mutation_hot_keys
+    plan = FaultPlan.correlated(["pod1", "pod3"], 60.0, downtime_s=15.0)
+    muts = MutationPlan.random_plan(mutation_hot_keys(6), 0.4, 120.0,
+                                    seed=7)
+    res = _mutation_fault_episode("write-through", plan, muts)
+    m = res.metrics
+    assert m.resilience_aborted_loads > 0     # the fault actually raced
+    assert m.coherence_writethroughs > 0
+    assert m.coherence_stale_reads == 0
+    assert m.resilience_incomplete_sessions == 0
+    _assert_no_version_lag(res)
+
+
+def test_durability_copies_restored_at_correct_version():
+    """Durability replication under a write stream: the copies that
+    survive (or are re-placed after) the failure are at the current
+    version — a restored durability copy never serves pre-failure data.
+    Bounded staleness still holds for every value actually consumed."""
+    from repro.core.coherence import MutationPlan
+    from repro.agent.geollm.workload import mutation_hot_keys
+    plan = FaultPlan.single("pod3", 60.0, restore_at=75.0)
+    muts = MutationPlan.random_plan(mutation_hot_keys(4), 0.3, 120.0,
+                                    seed=11)
+    res = _mutation_fault_episode("serve-stale", plan, muts,
+                                  coherence_kw={"bound_s": 20.0})
+    m = res.metrics
+    assert m.replica_installs > 0             # durability copies were placed
+    assert m.coherence_max_staleness_s <= 20.0 + 1e-9
+    assert m.resilience_incomplete_sessions == 0
+    coh = res.coherence
+    # serve-stale copies may lag in cache (readers decide at consume) but
+    # the ledger proves every consumed stale value was inside the bound
+    assert all(s <= 20.0 + 1e-9 for (_t, _k, _v, _c, s, verdict)
+               in coh.ledger if verdict == "serve_stale")
+
+
+def test_stale_churn_feeds_replica_demotion_pressure():
+    """ISSUE-8 satellite: a replica copy the write stream stales out
+    registers demotion pressure — the replicator folds the router's
+    ``replica_stale_counts`` into its decaying ``stale_pressure`` score,
+    drops the key past its grace epoch even though the replica is USED
+    (the no-flap invariant yields to coherence churn), vetoes
+    re-promotion while pressured, and lifts the ban once the score
+    decays."""
+    from repro.core.admission import FrequencySketch
+    from repro.core.replication import HotKeyReplicator
+
+    r = PodLocalCacheRouter([f"pod{i}" for i in range(3)],
+                            capacity_per_pod=4)
+    sketch = FrequencySketch(width=256, age_period_s=0)
+    key = "hot-2020"
+    sketch.touch_many([key] * 10)
+    r.demand_counts[key] = 5
+    rep = HotKeyReplicator(r, sketch, lambda k: "v", max_replicated=4,
+                           epoch_s=10.0, fanout=1, miss_min=2,
+                           stale_demote_min=1)
+    rep.run_epoch(10.0)
+    assert key in rep.replicated and rep.stats.promotes == 1
+    r.replica_reads[key] = 1
+    rep.run_epoch(20.0)                # grace epoch: copy survives
+    assert key in rep.replicated
+    # a write invalidates the placed copy: churn lands in the router feed
+    assert r.invalidate_copies(key) >= 1
+    assert r.replica_stale_counts[key] == 1
+    r.replica_reads[key] = 1           # used — only the churn rule drops it
+    r.demand_counts[key] = 5
+    rep.run_epoch(30.0)
+    assert key not in rep.replicated and rep.stats.demotes == 1
+    assert rep.stats.promotes == 1     # re-promotion vetoed under pressure
+    assert not r.replica_stale_counts  # drained into the decaying score
+    # pressure 1 decays to 0 after the epoch: the ban lifts
+    r.demand_counts[key] = 5
+    rep.run_epoch(40.0)
+    assert key in rep.replicated and rep.stats.promotes == 2
