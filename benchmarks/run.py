@@ -97,7 +97,7 @@ def main() -> None:
             parallel=par, adaptive=not pr3)
     section("admission", "Cross-session admission (TinyLFU vs install-all)",
             tables.table_admission, tasks_per_session=conc_tasks,
-            parallel=par, extras=not pr3)
+            parallel=par, extras=not pr3, scan_adaptive=not pr3)
     if not pr3:
         section("replication",
                 "Hot-key replication (epoch + spill, zipf-global)",
@@ -117,6 +117,9 @@ def main() -> None:
         section("coherence",
                 "Mutable data plane (write streams x coherence policies)",
                 tables.table_coherence, parallel=par)
+        section("llmfault",
+                "Decision-plane resilience (endpoint faults x mitigation)",
+                tables.table_llmfault, parallel=par)
     section("belady", "Beyond-paper: Belady oracle bound",
             tables.belady_bound, n=n23)
 
@@ -188,6 +191,14 @@ def main() -> None:
         # headline cell: update_heavy at the base write rate, by policy
         coh_cell = {c[4]: c for c in coh_rows
                     if c[1] == "update_heavy" and float(c[5]) == 0.2}
+        llf_rows = [r.split(",") for r in by_id.get("llmfault", [])
+                    if r.startswith("llmfault,")]
+        llf_cell = {(c[4], c[5]): c for c in llf_rows}
+        # scan-resistant admission rows (ISSUE-9 carried follow-up)
+        adm_scan = {c[4]: c for c in adm_rows
+                    if c[1] == "scan" and c[2] == "16"}
+        adm_z11 = {c[4]: c for c in adm_rows
+                   if c[1] == "zipf-1.1" and c[2] == "16"}
 
         def _coh_share_monotone_ok():
             """1 when the serve-stale stale-read share is non-decreasing
@@ -211,7 +222,7 @@ def main() -> None:
                 all(f[i] >= f[i + 1] - 1e-12 for i in range(len(f) - 1))
                 for f in by_cfg.values()))
         record = {
-            "schema": "bench_dcache/v7",
+            "schema": "bench_dcache/v8",
             "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "platform": {"python": platform.python_version(),
                          "machine": platform.machine()},
@@ -360,6 +371,44 @@ def main() -> None:
                 "coherence_stale20_max_staleness_s": _adm(coh_cell,
                                                           "stale20", 17),
                 "coherence_share_monotone_ok": _coh_share_monotone_ok(),
+                # decision-plane resilience (ISSUE 9): the no-fault
+                # baseline p95 and the mixed-regime (10% staggered
+                # outages + 8x straggler) p95 ratio per mitigation tier —
+                # the headline is breaker-fallback holding <= ~1.1x while
+                # naive retry degrades far worse
+                "llmfault_base_p95_s": _adm(llf_cell, ("none", "naive"), 20),
+                "llmfault_mixed_naive_p95_vs_base": _adm(
+                    llf_cell, ("mixed", "naive"), 21),
+                "llmfault_mixed_hedge_p95_vs_base": _adm(
+                    llf_cell, ("mixed", "hedge"), 21),
+                "llmfault_mixed_breaker_p95_vs_base": _adm(
+                    llf_cell, ("mixed", "breaker"), 21),
+                # blackout cell: the decision plane is gone — cache-op
+                # decisions degrade to the programmatic twin instead of
+                # stalling (structural never-stall-forever)
+                "llmfault_blackout_breaker_degraded": _adm(
+                    llf_cell, ("blackout", "breaker"), 13, cast=int),
+                "llmfault_blackout_breaker_fallback_share_pct": _adm(
+                    llf_cell, ("blackout", "breaker"), 14),
+                "llmfault_flaky_parse_fallbacks": _adm(
+                    llf_cell, ("flaky", "breaker"), 12, cast=int),
+                "llmfault_breaker_adm_agreement_pct": _adm(
+                    llf_cell, ("mixed", "breaker"), 18),
+                # zero-stall gate across the whole regime x tier matrix
+                "llmfault_incomplete_total": (
+                    sum(int(c[22]) for c in llf_rows) if llf_rows else None),
+                # scan-resistant admission (carried follow-up): the gated
+                # variant must close most of the install-all-vs-TinyLFU
+                # hit gap on the scan sweep without giving back the
+                # TinyLFU win on zipf
+                "admission_scan_base_local_hit_pct": _adm(adm_scan, "none",
+                                                          6),
+                "admission_scan_tinylfu_local_hit_pct": _adm(
+                    adm_scan, "tinylfu", 6),
+                "admission_scan_gated_local_hit_pct": _adm(
+                    adm_scan, "scan-tinylfu", 6),
+                "admission_zipf_gated_hit_delta_pp": _adm(
+                    adm_z11, "scan-tinylfu", 16),
             },
         }
         if args.profile:

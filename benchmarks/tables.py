@@ -246,7 +246,8 @@ def table_prefetch(tasks_per_session: int = 25,
 
 
 def table_admission(tasks_per_session: int = 25, extras: bool = True,
-                    parallel: bool = False) -> List[str]:
+                    parallel: bool = False,
+                    scan_adaptive: bool = False) -> List[str]:
     """Beyond-paper: cross-session cache admission on the shared pod cache.
 
     Every cell pairs the PR-2 baseline (``admission=None``: install every
@@ -294,14 +295,22 @@ def table_admission(tasks_per_session: int = 25, extras: bool = True,
                  for adm in (None, "tinylfu")]
         wide = ("sized-wide", {"rows_range": (2_000, 40_000)}, 16, 4, 0.3)
         grid += [(wide, adm) for adm in (None, "tinylfu", "tinylfu-cost")]
+    # ISSUE-9 carried follow-up: scan-resistant admission. The detector
+    # tracks the EWMA of the key-vs-victim frequency balance per admit
+    # call — a sequential scan (uniform popularity) sits near 0.5 and
+    # opens the TinyLFU gate (install-all), skewed traffic closes it.
+    # Default-off: the PR-3/PR-4 admission grid above is digest-locked.
+    if scan_adaptive:
+        grid += [(configs[3], "scan-tinylfu"),   # scan scenario
+                 (configs[1], "scan-tinylfu")]   # zipf-1.1 control
     scale_tps = min(10, tasks_per_session)
     cells = [lambda cfg=cfg, adm=adm: run_episode(
                  cfg[2],
                  scale_tps if cfg[2] >= 128 else tasks_per_session,
                  n_pods=cfg[3], reuse_rate=cfg[4], seed=0,
                  admission=(None if adm is None else
-                            "tinylfu-cost" if adm == "tinylfu-cost" else
-                            "tinylfu"),
+                            adm if adm in ("tinylfu-cost", "scan-tinylfu")
+                            else "tinylfu"),
                  admission_impl=("llm" if adm == "llm-tinylfu"
                                  else "python"),
                  **cfg[1])
@@ -725,7 +734,8 @@ def table_capacity(rates: Sequence[float] = (0.1, 0.2, 0.4, 0.8),
 
 
 def table_coherence(tasks_per_session: int = 12,
-                    parallel: bool = False) -> List[str]:
+                    parallel: bool = False,
+                    engine_kw: Dict = None) -> List[str]:
     """Beyond-paper: mutable data plane with cache coherence (ISSUE 8).
 
     The read-only tables assume a key's data never changes; this table
@@ -795,10 +805,11 @@ def table_coherence(tasks_per_session: int = 12,
     grid = [(sc, pol, base_rate) for sc in scen_kw for pol in policies]
     # mutation-rate monotonicity axis (update_heavy, serve-stale)
     grid += [("update_heavy", policies[3], r) for r in (0.05, 0.5)]
+    ekw = dict(engine_kw or {})   # degeneracy replays: empty endpoint plan
     cells = [lambda sc=sc, kw=pol[1], rate=rate: run_episode(
                  16, tasks_per_session, n_pods=4, reuse_rate=0.3, seed=0,
                  mutations=plan_for(sc, rate),
-                 **dict(scen_kw[sc], **kw))
+                 **dict(scen_kw[sc], **dict(kw, **ekw)))
              for sc, pol, rate in grid]
     results = _run_cells(cells, parallel)
     base_p95: Dict[str, float] = {}
@@ -821,6 +832,94 @@ def table_coherence(tasks_per_session: int = 12,
             f"{100 * m.coherence_stale_share:.2f},"
             f"{m.coherence_max_staleness_s:.3f},"
             f"{100 * m.coherence_agreement:.2f},{m.coherence_tokens},{sp}")
+    return rows
+
+
+def table_llmfault(tasks_per_session: int = 10,
+                   parallel: bool = False) -> List[str]:
+    """Beyond-paper: decision-plane resilience (ISSUE 9).
+
+    Every GPT call — the per-round planning penalty and the cache-op
+    decisions (admission here) — is routed through a pool of 4 simulated
+    endpoints under seeded :class:`~repro.core.endpoints.EndpointFaultPlan`
+    fault schedules, sweeping regime x mitigation tier on the zipf_global
+    16/4 replication-table cell:
+
+    Regimes: ``none`` (empty plan — the degeneracy reference, also the
+    p95 baseline), ``mixed`` (``outage_straggler``: ~10% staggered outages
+    over three endpoints plus one 8x straggler for the whole horizon — the
+    case retries alone cannot fix), ``blackout`` (correlated 12s
+    all-endpoint outage: the decision plane is GONE and only programmatic
+    fallback keeps cache-op decisions flowing), ``flaky`` (malformed-reply
+    windows on two endpoints plus a rate-limit window: parse fallbacks and
+    retry-after waits, no hard downtime).
+
+    Tiers are cumulative: ``naive`` = bounded retry/backoff only;
+    ``hedge`` adds EWMA-p95 hedged requests (second request to a different
+    endpoint, first wins, loser's tokens still charged); ``breaker`` adds
+    the per-endpoint circuit breaker whose open state steers calls away
+    from bad endpoints and trips cache-op decisions into the programmatic
+    twin (``degraded``/``fallback_share_pct``; those decisions are not
+    graded — ``adm_agreement_pct`` covers genuine LLM replies only).
+
+    Headline: on ``mixed``, the ``breaker`` tier must hold ``p95_vs_base``
+    within ~1.1x of the no-fault baseline while ``naive`` degrades far
+    worse (it keeps paying the straggler's 8x rounds and the outage
+    backoff on the session clock). ``incomplete`` is the structural
+    never-stall-forever gate — 0 in every cell."""
+    from repro.core.endpoints import EndpointFaultPlan, LIMIT, MALFORM
+
+    rows = ["table,scenario,n_sessions,n_pods,regime,tier,llm_calls,"
+            "retries,hedges,hedge_wins,rate_limited,malformed,"
+            "parse_fallbacks,degraded,fallback_share_pct,retry_tokens,"
+            "retry_wait_s,breaker_opens,adm_agreement_pct,p50_s,p95_s,"
+            "p95_vs_base,incomplete"]
+    zipfg = {"scenario": "zipf",
+             "scenario_kw": {"zipf_a": 1.1, "zipf_global": True}}
+    eps = [f"ep{i}" for i in range(4)]
+    horizon = 200.0
+    plans = {
+        "mixed": EndpointFaultPlan.outage_straggler(eps, horizon_s=horizon),
+        "blackout": EndpointFaultPlan.correlated(eps, at=30.0,
+                                                 downtime_s=12.0),
+        "flaky": (EndpointFaultPlan.single("ep1", 10.0, horizon,
+                                           kind=MALFORM, value=0.25)
+                  + EndpointFaultPlan.single("ep2", 20.0, horizon,
+                                             kind=MALFORM, value=0.25)
+                  + EndpointFaultPlan.single("ep0", 40.0, 80.0,
+                                             kind=LIMIT, value=5.0)),
+    }
+    tiers = {"naive": {"hedge": False, "breaker": False},
+             "hedge": {"hedge": True, "breaker": False},
+             "breaker": {"hedge": True, "breaker": True}}
+    # (regime, tier) grid: the no-fault baseline once, mixed and blackout
+    # across all three tiers, flaky at the bracketing tiers
+    grid = [("none", "naive")]
+    grid += [("mixed", t) for t in tiers]
+    grid += [("blackout", t) for t in tiers]
+    grid += [("flaky", t) for t in ("naive", "breaker")]
+    cells = [lambda regime=regime, tier=tier: run_episode(
+                 16, tasks_per_session, n_pods=4, reuse_rate=0.3, seed=1,
+                 prefetch=True, capacity_per_pod=8,
+                 admission="tinylfu", admission_impl="llm",
+                 endpoint_fault_plan=plans.get(regime, EndpointFaultPlan()),
+                 endpoint_kw=tiers[tier], **zipfg)
+             for regime, tier in grid]
+    results = _run_cells(cells, parallel)
+    base_p95 = results[0].metrics.p95_task_latency_s
+    for (regime, tier), res in zip(grid, results):
+        m = res.metrics
+        rows.append(
+            f"llmfault,zipfg-1.1,16,4,{regime},{tier},{m.llm_calls},"
+            f"{m.llm_retries},{m.llm_hedges},{m.llm_hedge_wins},"
+            f"{m.llm_rate_limited},{m.llm_malformed},"
+            f"{m.llm_parse_fallbacks},{m.llm_degraded_decisions},"
+            f"{100 * m.llm_fallback_share:.2f},{m.llm_retry_tokens},"
+            f"{m.llm_retry_wait_s:.3f},{m.llm_breaker_opens},"
+            f"{100 * m.admission_agreement:.2f},"
+            f"{m.p50_task_latency_s:.3f},{m.p95_task_latency_s:.3f},"
+            f"{m.p95_task_latency_s / base_p95:.3f},"
+            f"{m.resilience_incomplete_sessions}")
     return rows
 
 

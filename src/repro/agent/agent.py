@@ -68,6 +68,14 @@ class TaskTrace:
     retry_wait_s: float = 0.0
     timeout_loads: int = 0
     lost_work_s: float = 0.0
+    # LLM decision-plane accounting (filled by the concurrent engine's
+    # endpoint router; always zero without an EndpointFaultPlan): planning
+    # rounds retried against another endpoint, hedged rounds and how many
+    # the hedge won, and the wait seconds spent on detection/backoff
+    llm_retries: int = 0
+    llm_hedges: int = 0
+    llm_hedge_wins: int = 0
+    llm_retry_wait_s: float = 0.0
 
 
 class AgentRunner:
@@ -82,7 +90,8 @@ class AgentRunner:
 
     def __init__(self, registry: ToolRegistry, controller, llm: SimLLM,
                  clock, datastore, use_cache: bool = True,
-                 on_plan: Optional[Callable[[Task, Any], None]] = None):
+                 on_plan: Optional[Callable[[Task, Any], None]] = None,
+                 endpoints=None):
         self.registry = registry
         self.controller = controller
         self.llm = llm
@@ -90,11 +99,34 @@ class AgentRunner:
         self.store = datastore
         self.use_cache = use_cache
         self.on_plan = on_plan
+        # optional EndpointRouter: planning rounds route across the
+        # simulated GPT endpoint pool and pay retry/hedge latency on this
+        # session's clock. Cumulative counters; the engine snapshots them
+        # around each task to fill the TaskTrace llm_* fields.
+        self.endpoints = endpoints
+        self.llm_retries = 0
+        self.llm_hedges = 0
+        self.llm_hedge_wins = 0
+        self.llm_retry_wait_s = 0.0
 
     # -- latency/token helpers ------------------------------------------------
     def _llm_round(self, prompt_tokens: int, completion_tokens: int) -> int:
-        self.clock.advance(self.clock.latency.llm_round(
-            prompt_tokens, completion_tokens))
+        nominal = self.clock.latency.llm_round(prompt_tokens,
+                                               completion_tokens)
+        self.clock.advance(nominal)
+        ep = self.endpoints
+        if ep is not None:
+            # in-round token additions (miss re-plans, the _acquire prefill
+            # ride-along) stay direct clock advances: they are part of this
+            # round, not separate endpoint requests
+            extra, retries, hedges, wins, wait_s = ep.plan_call(
+                self.clock.now(), nominal, prompt_tokens + completion_tokens)
+            if extra:
+                self.clock.advance(extra)
+            self.llm_retries += retries
+            self.llm_hedges += hedges
+            self.llm_hedge_wins += wins
+            self.llm_retry_wait_s += wait_s
         return prompt_tokens + completion_tokens
 
     # -- acquisition ----------------------------------------------------------

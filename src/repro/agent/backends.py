@@ -19,7 +19,7 @@ import random
 import re
 from typing import Dict, Optional
 
-from repro.core.prompts import parse_json_tail
+from repro.core.prompts import LLMParseError, parse_json_tail
 
 # Table I targets: (success, correctness, obj-det F1, LCC recall, VQA rouge)
 PROFILES: Dict[tuple, Dict[str, float]] = {
@@ -72,22 +72,35 @@ class SimLLM:
 
     # -- generic completion --------------------------------------------------
     def complete(self, prompt: str) -> str:
+        handler = None
         if "Respond with a JSON object mapping each key" in prompt:
-            return self._read_decision(prompt)
-        if "return the NEW cache state" in prompt:
-            return self._update_decision(prompt)
-        if "ADMIT the candidate" in prompt:
-            return self._admission_decision(prompt)
-        if "REPLICATION controller" in prompt:
-            return self._replication_decision(prompt)
-        if "RECOVERY controller" in prompt:
-            return self._recovery_decision(prompt)
-        if "COHERENCE controller" in prompt:
-            return self._coherence_decision(prompt)
-        # planning / answer prompts: canned completion (token accounting is
-        # handled by the agent's latency model)
-        return ("Thought: I will decompose the task and call the tools in "
-                "order.\nAction: proceed.")
+            handler = self._read_decision
+        elif "return the NEW cache state" in prompt:
+            handler = self._update_decision
+        elif "ADMIT the candidate" in prompt:
+            handler = self._admission_decision
+        elif "REPLICATION controller" in prompt:
+            handler = self._replication_decision
+        elif "RECOVERY controller" in prompt:
+            handler = self._recovery_decision
+        elif "COHERENCE controller" in prompt:
+            handler = self._coherence_decision
+        if handler is None:
+            # planning / answer prompts: canned completion (token accounting
+            # is handled by the agent's latency model)
+            return ("Thought: I will decompose the task and call the tools "
+                    "in order.\nAction: proceed.")
+        try:
+            return handler(prompt)
+        except LLMParseError:
+            raise
+        except (AttributeError, IndexError, KeyError, TypeError,
+                ValueError) as exc:
+            # a prompt the parser cannot read (missing evidence line, garbled
+            # JSON, bad numeric field) is a typed parse failure, never a raw
+            # AttributeError/JSONDecodeError bubbling into the caller
+            raise LLMParseError(
+                f"unparseable {handler.__name__} prompt: {exc!r}") from exc
 
     # -- cache READ ----------------------------------------------------------
     def _read_decision(self, prompt: str) -> str:

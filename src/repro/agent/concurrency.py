@@ -122,6 +122,12 @@ from repro.core.coherence import (
     MutationPlan,
     make_coherence,
 )
+from repro.core.endpoints import (
+    EndpointFaultEvent,
+    EndpointFaultPlan,
+    EndpointRouter,
+    RoutedLLM,
+)
 from repro.core.locality import LocalityModel, make_affinity
 from repro.core.replication import HotKeyReplicator, make_replication
 from repro.core.traffic import ArrivalProcess, TrafficStats, make_traffic
@@ -422,10 +428,15 @@ class SharedCacheController:
     kind = "shared"
 
     def __init__(self, router: PodLocalCacheRouter, rng=None,
-                 decision_eps: float = 0.0):
+                 decision_eps: float = 0.0, endpoints=None):
         self.router = router
         self.rng = rng
         self.decision_eps = decision_eps
+        # optional EndpointRouter: when the GPT pool cannot serve at plan
+        # time, the read plan degrades to the eps=0 programmatic heuristic
+        # (the paper's "upper bound" decisions — structurally safe, just no
+        # longer the simulated-GPT path) and the router counts it
+        self.endpoints = endpoints
 
     def _cached(self, key: str) -> bool:
         # replica-aware: owner first, surviving replicas second. Without a
@@ -435,11 +446,18 @@ class SharedCacheController:
 
     def plan_reads(self, query: str, required_keys: Sequence[str],
                    few_shot: bool = False) -> ReadPlan:
+        simulate_llm = self.decision_eps and self.rng is not None
+        if simulate_llm and self.endpoints is not None \
+                and not self.endpoints.decision_available():
+            # degraded read plan: no eps draws are consumed (the GPT never
+            # answered, so there is no decision noise to simulate). Only
+            # reachable under a non-empty fault plan — the empty-plan
+            # bit-identity contract never takes this branch.
+            simulate_llm = False
         choices = {}
         for k in required_keys:
             c = "read_cache" if self._cached(k) else "load_db"
-            if (self.decision_eps and self.rng is not None
-                    and self.rng.random() < self.decision_eps):
+            if simulate_llm and self.rng.random() < self.decision_eps:
                 c = "load_db" if c == "read_cache" else "read_cache"
             choices[k] = c
         return ReadPlan(choices)
@@ -1427,6 +1445,29 @@ class EpisodeMetrics:
     coherence_max_staleness_s: float = 0.0
     coherence_agreement: float = 1.0
     coherence_tokens: int = 0
+    # LLM decision-plane resilience (ISSUE 9; all zero without an
+    # EndpointFaultPlan — the router itself only exists when one is
+    # passed). llm_calls counts every routed request (planning rounds +
+    # latency-free cache-op decisions); retries are failed attempts
+    # (outage picks, 429s); hedges/hedge_wins are the speculative second
+    # requests and how many answered first (the loser's tokens land in
+    # llm_retry_tokens); parse_fallbacks are ungraded programmatic
+    # fallbacks after a garbled prompt/completion; degraded_decisions are
+    # cache-op decisions the pool could not serve at all (fallback_share =
+    # degraded / decision opportunities); retry_wait_s is session-clock
+    # time planning rounds spent on detection/backoff/retry-after
+    llm_calls: int = 0
+    llm_retries: int = 0
+    llm_hedges: int = 0
+    llm_hedge_wins: int = 0
+    llm_rate_limited: int = 0
+    llm_malformed: int = 0
+    llm_parse_fallbacks: int = 0
+    llm_degraded_decisions: int = 0
+    llm_fallback_share: float = 0.0
+    llm_retry_tokens: int = 0
+    llm_retry_wait_s: float = 0.0
+    llm_breaker_opens: int = 0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -1494,7 +1535,10 @@ class ConcurrentEpisodeEngine:
                  mutations: Optional[MutationPlan] = None,
                  coherence: Optional[str] = None,
                  coherence_impl: str = "python",
-                 coherence_kw: Optional[Dict] = None):
+                 coherence_kw: Optional[Dict] = None,
+                 endpoint_fault_plan: Optional[EndpointFaultPlan] = None,
+                 n_endpoints: int = 4,
+                 endpoint_kw: Optional[Dict] = None):
         assert n_sessions >= 1 and n_pods >= 1
         if capacity_per_pod < 1:
             raise ValueError(
@@ -1570,9 +1614,34 @@ class ConcurrentEpisodeEngine:
                            if autoscale else None)
         assert autoscale or not autoscale_kw, \
             "autoscale_kw requires autoscale=True"
+        # LLM decision-plane resilience (ISSUE 9): a sim-time
+        # EndpointFaultPlan stands up a pool of N simulated GPT endpoints
+        # and an EndpointRouter that owns every routed ``complete()`` call
+        # (the four shared cache-op sub-LLMs below are wrapped in RoutedLLM)
+        # plus every planning round's retry/hedge latency. The router's RNG
+        # is private and planning extra is exactly 0.0 under an EMPTY
+        # (non-None) plan, so the degeneracy contract holds: empty-plan
+        # runs replay the router-free engine's traces bit-identically
+        # (tests/test_endpoints.py locks this down). ``None`` (default)
+        # skips the layer entirely.
+        self.endpoint_plan = endpoint_fault_plan
+        self.endpoints = None
+        if endpoint_fault_plan is not None:
+            if not isinstance(endpoint_fault_plan, EndpointFaultPlan):
+                raise ValueError(
+                    f"endpoint_fault_plan must be an EndpointFaultPlan or "
+                    f"None, got {type(endpoint_fault_plan).__name__}")
+            self.endpoints = EndpointRouter(
+                n_endpoints, endpoint_fault_plan, seed=seed + 514229,
+                **(endpoint_kw or {}))
+        elif endpoint_kw or n_endpoints != 4:
+            raise ValueError(
+                "endpoint_kw/n_endpoints require an endpoint fault plan "
+                "(pass endpoint_fault_plan=EndpointFaultPlan(...))")
+
         self.recovery_policy = None
         if recovery_impl is not None:
-            rec_llm = (SimLLM(self.profile, seed=seed + 331999)
+            rec_llm = (self._route(SimLLM(self.profile, seed=seed + 331999))
                        if recovery_impl == "llm" else None)
             self.recovery_policy = make_recovery(
                 impl=recovery_impl, llm=rec_llm, few_shot=few_shot,
@@ -1599,7 +1668,7 @@ class ConcurrentEpisodeEngine:
                     f"{type(mutations).__name__}")
             self.mutation_plan = (mutations if mutations is not None
                                   else MutationPlan())
-            coh_llm = (SimLLM(self.profile, seed=seed + 433003)
+            coh_llm = (self._route(SimLLM(self.profile, seed=seed + 433003))
                        if coherence_impl == "llm" else None)
             self.coherence_policy = make_coherence(
                 coherence or "write-invalidate", impl=coherence_impl,
@@ -1627,7 +1696,7 @@ class ConcurrentEpisodeEngine:
             # presence cannot change a single routing decision
             self.sketch = FrequencySketch(**(sketch_kw or {}))
         if admission is not None:
-            adm_llm = (SimLLM(self.profile, seed=seed + 104729)
+            adm_llm = (self._route(SimLLM(self.profile, seed=seed + 104729))
                        if admission_impl == "llm" else None)
             adm = make_admission(admission, impl=admission_impl, llm=adm_llm,
                                  few_shot=few_shot)
@@ -1659,7 +1728,7 @@ class ConcurrentEpisodeEngine:
             rkw = dict(replication_kw or {})
             pol_kw = {k: rkw.pop(k) for k in ("promote_min", "demote_frac")
                       if k in rkw}
-            rep_llm = (SimLLM(self.profile, seed=seed + 224737)
+            rep_llm = (self._route(SimLLM(self.profile, seed=seed + 224737))
                        if replication_impl == "llm" else None)
             rpol = make_replication(impl=replication_impl, llm=rep_llm,
                                     few_shot=few_shot, **pol_kw)
@@ -1673,6 +1742,12 @@ class ConcurrentEpisodeEngine:
             # (LLM admission, cache_admit) see recent demand, not
             # episode-lifetime counts
             self.locality.demand_window_s = 60.0
+
+    def _route(self, llm):
+        """Wrap a cache-op sub-LLM in the endpoint router (identity when no
+        endpoint fault plan is configured)."""
+        return RoutedLLM(llm, self.endpoints) if self.endpoints is not None \
+            else llm
 
     def _store_key(self):
         """Task-memo discriminator for datastore variants (frame content is
@@ -1688,7 +1763,8 @@ class ConcurrentEpisodeEngine:
         stats = SessionStats()
         controller = SharedCacheController(
             self.router, rng=llm.rng,
-            decision_eps=self.profile.cache_eps if self.llm_decisions else 0.0)
+            decision_eps=self.profile.cache_eps if self.llm_decisions else 0.0,
+            endpoints=self.endpoints)
         home_idx = (self.affinity.home(sid, 0)
                     if self.affinity is not None else None)
         scenario_kw = self.scenario_kw
@@ -1748,7 +1824,8 @@ class ConcurrentEpisodeEngine:
                    if self.prefetch else None)
         session.runner = AgentRunner(registry, controller, llm, clock,
                                      self.store, use_cache=True,
-                                     on_plan=on_plan)
+                                     on_plan=on_plan,
+                                     endpoints=self.endpoints)
         return session
 
     # -- async prefetch -----------------------------------------------------
@@ -1922,13 +1999,14 @@ class ConcurrentEpisodeEngine:
         ``migrating`` policy drifts it across the episode)."""
         aff = self.affinity
         faults = self._faults
+        endpoints = self.endpoints
         while True:
             task = s.next_task()
             if task is None:
                 return
             if aff is not None:
                 s.home_pod = self.pod_ids[aff.home(s.sid, s.cursor - 1)]
-            if faults is None:
+            if faults is None and endpoints is None:
                 trace = yield from s.runner.iter_task(task)
             else:
                 # per-task fault counters: retry adjustments land while
@@ -1937,12 +2015,20 @@ class ConcurrentEpisodeEngine:
                 st = s.stats
                 r0, w0 = st.retried_loads, st.retry_wait_s
                 to0, l0 = st.timeout_loads, st.lost_work_s
-                trace = yield from s.runner.iter_task(task)
+                rn = s.runner
+                er0, eh0 = rn.llm_retries, rn.llm_hedges
+                ew0, ews0 = rn.llm_hedge_wins, rn.llm_retry_wait_s
+                trace = yield from rn.iter_task(task)
                 trace.retried_loads = st.retried_loads - r0
                 trace.retry_wait_s = st.retry_wait_s - w0
                 trace.timeout_loads = st.timeout_loads - to0
                 trace.lost_work_s = st.lost_work_s - l0
-                faults.task_ends.append((s.clock.now(), trace.time_s))
+                trace.llm_retries = rn.llm_retries - er0
+                trace.llm_hedges = rn.llm_hedges - eh0
+                trace.llm_hedge_wins = rn.llm_hedge_wins - ew0
+                trace.llm_retry_wait_s = rn.llm_retry_wait_s - ews0
+                if faults is not None:
+                    faults.task_ends.append((s.clock.now(), trace.time_s))
             s.traces.append(trace)
 
     def run(self, tasks_per_session: int = 25,
@@ -1982,6 +2068,14 @@ class ConcurrentEpisodeEngine:
                 or self.coherence_policy.refresh_on_write)
             for mev in self.mutation_plan:
                 events.push(mev.at, PRI_FAULT, payload=mev)
+        # endpoint fault schedule (ISSUE 9): decision-plane faults enter
+        # the heap at PRI_FAULT like pod faults and writes; the router's
+        # analytic windows answer up/slow/limit queries directly, so these
+        # events only advance the router clock and count transitions
+        if self.endpoints is not None:
+            self.endpoints.now = 0.0
+            for eev in self.endpoint_plan:
+                events.push(eev.at, PRI_FAULT, payload=eev)
         tstats = None
         if self.traffic is None:
             sessions = [self._make_session(sid, tasks_per_session,
@@ -2022,10 +2116,15 @@ class ConcurrentEpisodeEngine:
         faults = self._faults
         scaler = self.autoscaler
         coherence = self._coherence
+        endpoints = self.endpoints
         n_events = n_steps = 0
         while events:
             t, payload = pop()
             n_events += 1
+            if endpoints is not None:
+                # decision calls read the router clock (plan calls pass
+                # their own timestamp), so keep it on the pop frontier
+                endpoints.now = t
             if replicator is not None and t >= replicator.next_epoch:
                 # replication epochs run on simulated-time boundaries,
                 # before the first event at/after each boundary (background
@@ -2073,6 +2172,12 @@ class ConcurrentEpisodeEngine:
                     # the policy's fan-out before any same-instant
                     # completion installs or session consumes
                     coherence.apply(t, payload)
+                    continue
+                elif cls is EndpointFaultEvent:
+                    # endpoint transition (ISSUE 9): the router reads
+                    # availability from analytic windows, so this only
+                    # moves its clock and counts the transition
+                    self.endpoints.apply(t, payload)
                     continue
                 else:
                     # membership change (FaultEvent) or retry (RetryEvent)
@@ -2143,6 +2248,11 @@ class ConcurrentEpisodeEngine:
         rec_pol = self.recovery_policy
         coh = self._coherence
         cpol = self.coherence_policy
+        ep = self.endpoints
+        parse_fb = sum(getattr(p, "parse_fallbacks", 0)
+                       for p in (self.admission_policy,
+                                 getattr(self.replicator, "policy", None),
+                                 rec_pol, cpol))
         return EpisodeMetrics(
             n_sessions=self.n_sessions,
             n_pods=self.n_pods,
@@ -2254,6 +2364,19 @@ class ConcurrentEpisodeEngine:
             coherence_agreement=getattr(cpol, "agreement", 1.0),
             coherence_tokens=(getattr(cpol, "prompt_tokens", 0)
                               + getattr(cpol, "completion_tokens", 0)),
+            llm_calls=ep.llm_calls if ep else 0,
+            llm_retries=ep.retries if ep else 0,
+            llm_hedges=ep.hedges if ep else 0,
+            llm_hedge_wins=ep.hedge_wins if ep else 0,
+            llm_rate_limited=ep.rate_limited if ep else 0,
+            llm_malformed=ep.malformed if ep else 0,
+            llm_parse_fallbacks=parse_fb,
+            llm_degraded_decisions=ep.degraded if ep else 0,
+            llm_fallback_share=ep.fallback_share if ep else 0.0,
+            llm_retry_tokens=ep.retry_tokens if ep else 0,
+            llm_retry_wait_s=sum(s.runner.llm_retry_wait_s
+                                 for s in sessions) if ep else 0.0,
+            llm_breaker_opens=ep.breaker_opens if ep else 0,
         )
 
 

@@ -358,6 +358,75 @@ class Doorkeeper(AdmissionPolicy):
                 "resident is evicted.")
 
 
+class ScanTinyLFU(TinyLFU):
+    """Scan-resistant TinyLFU (carried follow-up from PR 3/4).
+
+    TinyLFU's strictly-higher gate is exactly wrong during a sequential
+    scan: the convoy of sessions sweeps the key space in lockstep, so the
+    *next* keys — not the frequent ones — are the ones about to be read,
+    and install-everything beats TinyLFU (30.5% vs 22.8% local hits on the
+    ``scan`` scenario). The stride detector rides the admission candidate
+    stream (no sketch change — sketch behavior is digest-locked): each
+    key is assigned a position the first time it shows up as a candidate,
+    so a sweep — which first visits keys in a stable order and then
+    revisits them in that same order — produces successive candidate
+    positions with small deltas (``|delta| <= window``; the convoy's
+    interleaving and task-level reuse jitter the delta around 0/1, never
+    far). A skewed workload's candidates are tail keys in popularity
+    order, uncorrelated with first-seen order, so deltas are uniform over
+    the keyspace. An EWMA of the small-delta indicator with hysteresis
+    opens the gate (admit everything, LRU-like) while the stream is
+    scan-shaped and closes it when skew returns. Measured gate-open share
+    on the candidate stream: ~0.99 on ``scan`` vs <= 0.07 on ``working``
+    / ``zipf`` / ``hotspot``."""
+
+    name = "scan-tinylfu"
+
+    def __init__(self, window: int = 8, open_at: float = 0.6,
+                 close_at: float = 0.4, alpha: float = 0.1):
+        assert window >= 1
+        assert 0.0 < close_at < open_at < 1.0 and 0.0 < alpha <= 1.0
+        self.window = window
+        self.open_at = open_at
+        self.close_at = close_at
+        self.alpha = alpha
+        self._pos: Dict[str, int] = {}    # key -> first-seen position
+        self._prev: Optional[int] = None
+        # seeded between the thresholds: the gate starts closed (pure
+        # TinyLFU) and a scan opens it within a few candidates
+        self._ewma = 0.5
+        self.gate_open = False
+        self.gate_opens = 0
+        self.gate_closes = 0
+
+    def admit(self, key, victim, sketch, entries, size_bytes=None):
+        pos = self._pos.setdefault(key, len(self._pos))
+        delta = pos - self._prev if self._prev is not None else 1
+        self._prev = pos
+        signal = 1.0 if abs(delta) <= self.window else 0.0
+        self._ewma += self.alpha * (signal - self._ewma)
+        if self.gate_open:
+            if self._ewma < self.close_at:
+                self.gate_open = False
+                self.gate_closes += 1
+        elif self._ewma >= self.open_at:
+            self.gate_open = True
+            self.gate_opens += 1
+        if self.gate_open:
+            return True        # scan detected: admit (evict LRU-style)
+        return super().admit(key, victim, sketch, entries, size_bytes)
+
+    def describe(self):
+        return ("Scan-resistant TinyLFU admission: normally ADMIT the "
+                "candidate (evicting the victim) only if its estimated "
+                "frequency is STRICTLY HIGHER than the victim's, otherwise "
+                "BYPASS. But when the recent candidate stream looks like a "
+                "sequential scan — successive candidates visiting the key "
+                "space in a stable sweep order instead of popularity-random "
+                "tail keys — open the gate and ADMIT everything until the "
+                "stream stops looking sequential.")
+
+
 class LLMAdmission(AdmissionPolicy):
     """GPT-driven admission: the base policy's ``describe()`` text plus the
     sketch estimates are rendered into a prompt and the LLM answers
@@ -382,6 +451,10 @@ class LLMAdmission(AdmissionPolicy):
         self.llm_correct = 0
         self.prompt_tokens = 0
         self.completion_tokens = 0
+        # resilience fallbacks to the programmatic base (ungraded): garbled
+        # prompt/completion vs endpoint pool down (ISSUE 9)
+        self.parse_fallbacks = 0
+        self.degraded = 0
         # locality evidence source (repro.core.locality.LocalityModel):
         # wired by the concurrent engine under session->pod affinity; the
         # prompt then exposes the candidate's remote consumer demand.
@@ -402,26 +475,39 @@ class LLMAdmission(AdmissionPolicy):
         return json.dumps(demand, sort_keys=True) if demand else None
 
     def admit(self, key, victim, sketch, entries, size_bytes=None):
-        from repro.core.prompts import admission_decision_prompt, \
-            parse_json_tail
+        from repro.core.endpoints import LLMUnavailableError
+        from repro.core.prompts import LLMParseError, \
+            admission_decision_prompt, parse_json_tail
         kf, vf = (sketch.estimate_many((key, victim))
                   if sketch is not None else (0, 0))
         prompt = admission_decision_prompt(
             self.base.describe(), key, victim, kf, vf,
             entries_json(entries), self.few_shot,
             home_demand_json=self._home_demand_json(key))
-        completion = self.llm.complete(prompt)
-        self.prompt_tokens += len(prompt) // 4
-        self.completion_tokens += len(completion) // 4
         expected = self.base.admit(key, victim, sketch, entries,
                                    size_bytes=size_bytes)
+        try:
+            completion = self.llm.complete(prompt)
+        except LLMUnavailableError:
+            # endpoint pool down: programmatic twin, ungraded (the router
+            # already billed the wasted retry tokens)
+            self.degraded += 1
+            return expected
+        except LLMParseError:
+            self.parse_fallbacks += 1
+            self.prompt_tokens += len(prompt) // 4
+            return expected
+        self.prompt_tokens += len(prompt) // 4
+        self.completion_tokens += len(completion) // 4
         try:
             raw = parse_json_tail(completion)
             decision = raw.get("decision") if isinstance(raw, dict) else None
         except ValueError:
             decision = None
         if decision not in ("admit", "bypass"):
-            decision = "admit" if expected else "bypass"
+            # garbled/meaningless completion: programmatic twin, ungraded
+            self.parse_fallbacks += 1
+            return expected
         got = decision == "admit"
         self.llm_total += 1
         self.llm_correct += int(got == expected)
@@ -429,7 +515,8 @@ class LLMAdmission(AdmissionPolicy):
 
 
 ADMISSIONS = {"always": AdmitAll, "tinylfu": TinyLFU,
-              "tinylfu-cost": TinyLFUCost, "doorkeeper": Doorkeeper}
+              "tinylfu-cost": TinyLFUCost, "doorkeeper": Doorkeeper,
+              "scan-tinylfu": ScanTinyLFU}
 
 
 def make_admission(name: str, *, impl: str = "python", llm=None,

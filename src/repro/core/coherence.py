@@ -300,6 +300,10 @@ class LLMCoherence(CoherencePolicy):
         self.llm_correct = 0
         self.prompt_tokens = 0
         self.completion_tokens = 0
+        # resilience fallbacks to the programmatic base (ungraded): garbled
+        # prompt/completion vs endpoint pool down (ISSUE 9)
+        self.parse_fallbacks = 0
+        self.degraded = 0
 
     @property
     def invalidate_on_write(self) -> bool:          # type: ignore[override]
@@ -327,9 +331,21 @@ class LLMCoherence(CoherencePolicy):
 
     def on_stale_read(self, key: str, staleness_s: float, age_s: float,
                       freq: int) -> str:
+        from repro.core.endpoints import LLMUnavailableError
+        from repro.core.prompts import LLMParseError
         expected = self.base.on_stale_read(key, staleness_s, age_s, freq)
         prompt = self.render_prompt(key, staleness_s, freq)
-        out = self.llm.complete(prompt)
+        try:
+            out = self.llm.complete(prompt)
+        except LLMUnavailableError:
+            # endpoint pool down: programmatic twin, ungraded (the router
+            # already billed the wasted retry tokens)
+            self.degraded += 1
+            return expected
+        except LLMParseError:
+            self.parse_fallbacks += 1
+            self.prompt_tokens += len(prompt) // 4
+            return expected
         self.prompt_tokens += len(prompt) // 4
         self.completion_tokens += len(out) // 4
         try:
@@ -339,7 +355,9 @@ class LLMCoherence(CoherencePolicy):
         except ValueError:
             decision = None
         if decision not in (REFRESH, SERVE_STALE):
-            decision = expected                 # malformed -> programmatic
+            # garbled/meaningless completion: programmatic twin, ungraded
+            self.parse_fallbacks += 1
+            return expected
         self.llm_total += 1
         if decision == expected:
             self.llm_correct += 1

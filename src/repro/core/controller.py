@@ -15,8 +15,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core.admission import AdmissionPolicy, FrequencySketch
 from repro.core.cache import DataCache
+from repro.core.endpoints import LLMUnavailableError
 from repro.core.policies import Policy
 from repro.core.prompts import (
+    LLMParseError,
     parse_json_tail,
     read_decision_prompt,
     update_decision_prompt,
@@ -175,6 +177,21 @@ class LLMController:
         self._fallback = ProgrammaticController(cache, policy,
                                                 admission=admission,
                                                 sketch=sketch)
+        # resilience fallbacks (ungraded -- there is no LLM answer to
+        # grade): unparseable prompt/completion vs endpoint pool down
+        self.parse_fallbacks = 0
+        self.degraded = 0
+
+    def _programmatic_plan(self, required_keys: Sequence[str],
+                           prompt_tokens: int = 0,
+                           completion_tokens: int = 0) -> ReadPlan:
+        # inline twin of ProgrammaticController.plan_reads WITHOUT the
+        # sketch touch (plan_reads already touched these keys before the
+        # LLM call failed)
+        return ReadPlan({k: ("read_cache" if k in self.cache else "load_db")
+                         for k in required_keys},
+                        prompt_tokens=prompt_tokens,
+                        completion_tokens=completion_tokens)
 
     # -- read ---------------------------------------------------------------
     def plan_reads(self, query: str, required_keys: Sequence[str],
@@ -187,12 +204,27 @@ class LLMController:
         fs = self.few_shot if few_shot is None else few_shot
         prompt = read_decision_prompt(query, required_keys,
                                       self.cache.contents_json(), fs)
-        completion = self.llm.complete(prompt)
+        try:
+            completion = self.llm.complete(prompt)
+        except LLMUnavailableError:
+            # endpoint pool down: degrade to the programmatic plan (the
+            # router already charged the wasted retry tokens)
+            self.degraded += 1
+            return self._programmatic_plan(required_keys)
+        except LLMParseError:
+            self.parse_fallbacks += 1
+            return self._programmatic_plan(required_keys,
+                                           prompt_tokens=len(prompt) // 4)
         stats = self.cache.stats
         try:
             raw = parse_json_tail(completion)
-        except ValueError:
-            raw = {}
+        except LLMParseError:
+            # garbled completion: every key falls back programmatically,
+            # ungraded (there is no per-key decision to grade)
+            self.parse_fallbacks += 1
+            return self._programmatic_plan(
+                required_keys, prompt_tokens=len(prompt) // 4,
+                completion_tokens=len(completion) // 4)
         choices: Dict[str, str] = {}
         for k in required_keys:
             c = raw.get(k) if isinstance(raw, dict) else None
@@ -225,7 +257,19 @@ class LLMController:
         prompt = update_decision_prompt(
             self.policy.describe(), new_loads, self.cache.contents_json(),
             self.cache.capacity, self.few_shot)
-        completion = self.llm.complete(prompt)
+        try:
+            completion = self.llm.complete(prompt)
+        except (LLMParseError, LLMUnavailableError) as exc:
+            if isinstance(exc, LLMUnavailableError):
+                self.degraded += 1
+                pt = 0  # nothing served; the router billed the retries
+            else:
+                self.parse_fallbacks += 1
+                pt = len(prompt) // 4
+            self.cache.apply_state(self._expected_state(new_loads),
+                                   loader, size_of)
+            return {"prompt_tokens": pt + adm_pt,
+                    "completion_tokens": adm_ct, "bypassed": bypassed}
         stats = self.cache.stats
         try:
             new_state = parse_json_tail(completion)
@@ -233,13 +277,16 @@ class LLMController:
             new_state = [str(k) for k in new_state]
         except (ValueError, AssertionError):
             new_state = None
-        # grade the LLM's update against the programmatic policy
         expected = self._expected_state(new_loads)
-        stats.llm_total_decisions += 1
-        stats.llm_correct_decisions += int(
-            new_state is not None and set(new_state) == set(expected))
         if new_state is None:
-            new_state = expected  # unparseable -> programmatic fallback
+            # unparseable completion -> programmatic fallback, ungraded
+            self.parse_fallbacks += 1
+            new_state = expected
+        else:
+            # grade the LLM's update against the programmatic policy
+            stats.llm_total_decisions += 1
+            stats.llm_correct_decisions += int(
+                set(new_state) == set(expected))
         self.cache.apply_state(new_state, loader, size_of)
         return {"prompt_tokens": len(prompt) // 4 + adm_pt,
                 "completion_tokens": len(completion) // 4 + adm_ct,

@@ -311,6 +311,10 @@ class LLMRecovery(RecoveryPolicy):
         self.llm_correct = 0
         self.prompt_tokens = 0
         self.completion_tokens = 0
+        # resilience fallbacks to the programmatic base (ungraded): garbled
+        # prompt/completion vs endpoint pool down (ISSUE 9)
+        self.parse_fallbacks = 0
+        self.degraded = 0
         self._top_json = "[]"            # evidence block, set per failover
 
     def describe(self):
@@ -324,22 +328,35 @@ class LLMRecovery(RecoveryPolicy):
         self._top_json = json.dumps([{"key": k, "freq": f} for k, f in top])
 
     def decide(self, key, freq):
-        from repro.core.prompts import parse_json_tail, \
+        from repro.core.endpoints import LLMUnavailableError
+        from repro.core.prompts import LLMParseError, parse_json_tail, \
             recovery_decision_prompt
         prompt = recovery_decision_prompt(
             self.base.describe(), key, freq, self.base.rewarm_min,
             self._top_json, self.few_shot)
-        completion = self.llm.complete(prompt)
+        expected = self.base.decide(key, freq)
+        try:
+            completion = self.llm.complete(prompt)
+        except LLMUnavailableError:
+            # endpoint pool down: programmatic twin, ungraded (the router
+            # already billed the wasted retry tokens)
+            self.degraded += 1
+            return expected
+        except LLMParseError:
+            self.parse_fallbacks += 1
+            self.prompt_tokens += len(prompt) // 4
+            return expected
         self.prompt_tokens += len(prompt) // 4
         self.completion_tokens += len(completion) // 4
-        expected = self.base.decide(key, freq)
         try:
             raw = parse_json_tail(completion)
             decision = raw.get("decision") if isinstance(raw, dict) else None
         except ValueError:
             decision = None
         if decision not in ("rewarm", "lazy"):
-            decision = expected
+            # garbled/meaningless completion: programmatic twin, ungraded
+            self.parse_fallbacks += 1
+            return expected
         self.llm_total += 1
         self.llm_correct += int(decision == expected)
         return decision

@@ -12,6 +12,16 @@ from __future__ import annotations
 import json
 from typing import Dict, List, Optional, Sequence
 
+
+class LLMParseError(ValueError):
+    """A prompt or completion could not be parsed into a decision.
+
+    Subclasses ``ValueError`` so every existing generic decision handler
+    (and ``ToolRegistry.call``'s error surface) keeps catching it; typed so
+    the ``LLM*`` policy wrappers can uniformly fall back to their
+    programmatic twin and count the fallback."""
+
+
 SYSTEM_HEADER = (
     "As a Copilot handling geospatial data, you have access to the following "
     "tools [...]\n"
@@ -283,4 +293,4 @@ def parse_json_tail(text: str):
                 return json.loads(text[start:])
             except json.JSONDecodeError:
                 continue
-    raise ValueError(f"no JSON found in completion: {text[:200]!r}")
+    raise LLMParseError(f"no JSON found in completion: {text[:200]!r}")

@@ -132,6 +132,10 @@ class LLMReplication(ReplicationPolicy):
         self.llm_correct = 0
         self.prompt_tokens = 0
         self.completion_tokens = 0
+        # resilience fallbacks to the programmatic base (ungraded): garbled
+        # prompt/completion vs endpoint pool down (ISSUE 9)
+        self.parse_fallbacks = 0
+        self.degraded = 0
         self._top_json = "[]"          # evidence block, set per epoch
         self._home_demand: Dict[str, Dict[str, int]] = {}   # locality feed
 
@@ -154,7 +158,8 @@ class LLMReplication(ReplicationPolicy):
         self._home_demand = demand
 
     def decide(self, key, freq, replicated):
-        from repro.core.prompts import parse_json_tail, \
+        from repro.core.endpoints import LLMUnavailableError
+        from repro.core.prompts import LLMParseError, parse_json_tail, \
             replication_decision_prompt
         hd = self._home_demand.get(key)
         prompt = replication_decision_prompt(
@@ -163,17 +168,29 @@ class LLMReplication(ReplicationPolicy):
             self._top_json, self.few_shot,
             home_demand_json=(json.dumps(hd, sort_keys=True) if hd
                               else None))
-        completion = self.llm.complete(prompt)
+        expected = self.base.decide(key, freq, replicated)
+        try:
+            completion = self.llm.complete(prompt)
+        except LLMUnavailableError:
+            # endpoint pool down: programmatic twin, ungraded (the router
+            # already billed the wasted retry tokens)
+            self.degraded += 1
+            return expected
+        except LLMParseError:
+            self.parse_fallbacks += 1
+            self.prompt_tokens += len(prompt) // 4
+            return expected
         self.prompt_tokens += len(prompt) // 4
         self.completion_tokens += len(completion) // 4
-        expected = self.base.decide(key, freq, replicated)
         try:
             raw = parse_json_tail(completion)
             decision = raw.get("decision") if isinstance(raw, dict) else None
         except ValueError:
             decision = None
         if decision not in ("replicate", "drop", "hold"):
-            decision = expected
+            # garbled/meaningless completion: programmatic twin, ungraded
+            self.parse_fallbacks += 1
+            return expected
         if decision == "replicate" and replicated:
             decision = "hold"            # already replicated: idempotent
         if decision == "drop" and not replicated:

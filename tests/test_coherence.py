@@ -203,7 +203,10 @@ def test_llm_coherence_malformed_output_falls_back():
     pol = LLMCoherence(ServeStaleCoherence(bound_s=20.0), Broken())
     assert pol.on_stale_read("k", 5.0, 5.0, 2) == SERVE_STALE
     assert pol.on_stale_read("k", 25.0, 25.0, 2) == REFRESH
-    assert pol.llm_total == 2 and pol.agreement == 1.0   # fallback grades
+    # malformed completions are counted as parse fallbacks, not graded:
+    # the programmatic twin answered, so agreement must not move
+    assert pol.parse_fallbacks == 2 and pol.llm_total == 0
+    assert pol.agreement == 1.0
     assert pol.prompt_tokens > 0 and pol.completion_tokens > 0
 
 
