@@ -120,6 +120,9 @@ def main() -> None:
         section("llmfault",
                 "Decision-plane resilience (endpoint faults x mitigation)",
                 tables.table_llmfault, parallel=par)
+        section("plancache",
+                "Plan-cache tier (repeat-share x impl, faulted regime)",
+                tables.table_plancache, parallel=par)
     section("belady", "Beyond-paper: Belady oracle bound",
             tables.belady_bound, n=n23)
 
@@ -194,6 +197,10 @@ def main() -> None:
         llf_rows = [r.split(",") for r in by_id.get("llmfault", [])
                     if r.startswith("llmfault,")]
         llf_cell = {(c[4], c[5]): c for c in llf_rows}
+        pc_rows = [r.split(",") for r in by_id.get("plancache", [])
+                   if r.startswith("plancache,")]
+        # cells keyed (regime, repeat_pct, impl)
+        pc_cell = {(c[4], c[5], c[6]): c for c in pc_rows}
         # scan-resistant admission rows (ISSUE-9 carried follow-up)
         adm_scan = {c[4]: c for c in adm_rows
                     if c[1] == "scan" and c[2] == "16"}
@@ -222,7 +229,7 @@ def main() -> None:
                 all(f[i] >= f[i + 1] - 1e-12 for i in range(len(f) - 1))
                 for f in by_cfg.values()))
         record = {
-            "schema": "bench_dcache/v8",
+            "schema": "bench_dcache/v9",
             "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "platform": {"python": platform.python_version(),
                          "machine": platform.machine()},
@@ -409,6 +416,34 @@ def main() -> None:
                     adm_scan, "scan-tinylfu", 6),
                 "admission_zipf_gated_hit_delta_pp": _adm(
                     adm_z11, "scan-tinylfu", 16),
+                # plan-cache tier (ISSUE 10): repeat-heavy hit rate, token
+                # cut at p95 parity on the clean regime, and the faulted
+                # headline — hits restore p95 toward the no-fault baseline
+                # under the mixed outage+straggler regime at the
+                # retry-only tier (p95_vs_off strictly < 1.0)
+                "plancache_repeat60_hit_rate_pct": _adm(
+                    pc_cell, ("none", "60", "python"), 9),
+                "plancache_repeat60_p95_vs_off": _adm(
+                    pc_cell, ("none", "60", "python"), 23),
+                "plancache_repeat60_fleet_tokens": _adm(
+                    pc_cell, ("none", "60", "python"), 19, cast=int),
+                "plancache_repeat60_off_fleet_tokens": _adm(
+                    pc_cell, ("none", "60", "off"), 19, cast=int),
+                "plancache_zero_repeat_hits": _adm(
+                    pc_cell, ("none", "0", "python"), 8, cast=int),
+                "plancache_mixed_off_p95_s": _adm(
+                    pc_cell, ("mixed", "60", "off"), 22),
+                "plancache_mixed_python_p95_vs_off": _adm(
+                    pc_cell, ("mixed", "60", "python"), 23),
+                "plancache_mixed_llm_p95_vs_off": _adm(
+                    pc_cell, ("mixed", "60", "llm"), 23),
+                "plancache_llm_agreement_pct": _adm(
+                    pc_cell, ("none", "60", "llm"), 16),
+                "plancache_llm_tokens": _adm(
+                    pc_cell, ("none", "60", "llm"), 17, cast=int),
+                # zero-stale gate across every cell (measured, not trusted)
+                "plancache_stale_served_total": (
+                    sum(int(c[15]) for c in pc_rows) if pc_rows else None),
             },
         }
         if args.profile:

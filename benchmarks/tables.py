@@ -923,6 +923,85 @@ def table_llmfault(tasks_per_session: int = 10,
     return rows
 
 
+def table_plancache(tasks_per_session: int = 10,
+                    parallel: bool = False) -> List[str]:
+    """Beyond-paper: the plan-cache tier (ISSUE 10).
+
+    The planning round is the single largest sim-time item; this table
+    sweeps repeat-share x plan-cache impl on the zipf_global 16/4 cell,
+    then replays the repeat-heavy cell under PR 9's mixed
+    outage+straggler regime at the retry-only mitigation tier (the case
+    hedging is not there to mask — every straggler-landed planning round
+    pays the 8x service time on the session clock).
+
+    Cells: ``none`` regime at repeat 0% (off vs python: the zero-hit
+    lock — a non-repeating stream cannot hit, the tier costs one cache
+    read per task and nothing else) and repeat 60% (off / python / llm;
+    the GPT path runs at capacity 16 so eviction pressure actually
+    consults the model — a free-slot install never prompts); ``mixed``
+    regime at repeat 60% across the same three impls.
+
+    Headline (the acceptance gate tests/test_plan_cache.py and CI's
+    smoke cell hold): on ``mixed``, both cached impls must show
+    ``p95_vs_off`` strictly below 1.0 — a plan-cache hit skips the
+    planning round entirely, so repeated templates never touch the
+    straggler — while ``none``-regime hits hold p95 parity and cut mean
+    latency and trace tokens. ``stale_served`` is 0 in every cell (the
+    digest embeds datastore versions + residency; version-lagged plans
+    are unreachable by construction, and the serve-time guard measures
+    it)."""
+    from repro.core.endpoints import EndpointFaultPlan
+
+    rows = ["table,scenario,n_sessions,n_pods,regime,repeat_pct,impl,"
+            "lookups,hits,hit_rate_pct,installs,rejected,evictions,"
+            "expired,invalidations,stale_served,pc_agreement_pct,"
+            "pc_tokens,trace_tokens,fleet_tokens,mean_s,p50_s,p95_s,"
+            "p95_vs_off,incomplete"]
+    eps = [f"ep{i}" for i in range(4)]
+    mixed = EndpointFaultPlan.outage_straggler(eps, horizon_s=400.0)
+    impls = {"off": {}, "python": {"plan_cache": "python"},
+             "llm": {"plan_cache": "llm", "plan_cache_kw": {"capacity": 16}}}
+    grid = [("none", 0.0, "off"), ("none", 0.0, "python"),
+            ("none", 0.6, "off"), ("none", 0.6, "python"),
+            ("none", 0.6, "llm"),
+            ("mixed", 0.6, "off"), ("mixed", 0.6, "python"),
+            ("mixed", 0.6, "llm")]
+
+    def _cell(regime, repeat, impl):
+        skw = {"zipf_a": 1.1, "zipf_global": True}
+        if repeat:
+            skw["repeat_p"] = repeat
+        kw = dict(impls[impl])
+        if regime == "mixed":
+            kw["endpoint_fault_plan"] = mixed
+            kw["endpoint_kw"] = {"hedge": False, "breaker": False}
+        return run_episode(16, tasks_per_session, n_pods=4, reuse_rate=0.3,
+                           seed=1, prefetch=True, capacity_per_pod=8,
+                           scenario="zipf", scenario_kw=skw, **kw)
+
+    cells = [lambda g=g: _cell(*g) for g in grid]
+    results = _run_cells(cells, parallel)
+    off_p95 = {(regime, repeat): res.metrics.p95_task_latency_s
+               for (regime, repeat, impl), res in zip(grid, results)
+               if impl == "off"}
+    for (regime, repeat, impl), res in zip(grid, results):
+        m = res.metrics
+        rows.append(
+            f"plancache,zipfg-1.1,16,4,{regime},{100 * repeat:g},{impl},"
+            f"{m.plancache_lookups},{m.plancache_hits},"
+            f"{100 * m.plancache_hit_rate:.2f},{m.plancache_installs},"
+            f"{m.plancache_rejected},{m.plancache_evictions},"
+            f"{m.plancache_expired},{m.plancache_invalidations},"
+            f"{m.plancache_stale_served},"
+            f"{100 * m.plancache_agreement:.2f},{m.plancache_tokens},"
+            f"{m.tokens_trace_total},{m.tokens_fleet_total},"
+            f"{m.mean_task_latency_s:.3f},{m.p50_task_latency_s:.3f},"
+            f"{m.p95_task_latency_s:.3f},"
+            f"{m.p95_task_latency_s / off_p95[(regime, repeat)]:.3f},"
+            f"{m.resilience_incomplete_sessions}")
+    return rows
+
+
 def belady_bound(n: int = 200, parallel: bool = False) -> List[str]:
     """Beyond-paper: Belady/MIN oracle as the eviction upper bound.
 

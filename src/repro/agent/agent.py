@@ -31,7 +31,9 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.agent.backends import SimLLM
 from repro.agent.geollm import geotools
 from repro.agent.geollm.workload import Step, Task, _frame_var
-from repro.core.controller import LLMController, ProgrammaticController
+from repro.core.controller import (LLMController, ProgrammaticController,
+                                   ReadPlan)
+from repro.core.plan_cache import task_template_id
 from repro.core.tools import ToolRegistry
 
 # token-accounting constants (calibrated to Table I "Avg Tokens/Task").
@@ -76,6 +78,9 @@ class TaskTrace:
     llm_hedges: int = 0
     llm_hedge_wins: int = 0
     llm_retry_wait_s: float = 0.0
+    # plan-cache tier (always zero without a PlanCache): planning rounds
+    # this task skipped because a stored plan was served verbatim
+    plancache_hits: int = 0
 
 
 class AgentRunner:
@@ -91,7 +96,7 @@ class AgentRunner:
     def __init__(self, registry: ToolRegistry, controller, llm: SimLLM,
                  clock, datastore, use_cache: bool = True,
                  on_plan: Optional[Callable[[Task, Any], None]] = None,
-                 endpoints=None):
+                 endpoints=None, plan_cache=None):
         self.registry = registry
         self.controller = controller
         self.llm = llm
@@ -99,6 +104,11 @@ class AgentRunner:
         self.store = datastore
         self.use_cache = use_cache
         self.on_plan = on_plan
+        # optional shared PlanCache (ISSUE 10): consult before planning; a
+        # hit serves the stored read plan verbatim and skips the planning
+        # round (zero plan tokens, no endpoint exposure). None = off, the
+        # planning path is byte-identical to the pre-plan-cache engine.
+        self.plan_cache = plan_cache
         # optional EndpointRouter: planning rounds route across the
         # simulated GPT endpoint pool and pay retry/hedge latency on this
         # session's clock. Cumulative counters; the engine snapshots them
@@ -244,12 +254,50 @@ class AgentRunner:
         # are unchanged. The on_plan hook lets a scheduler start the planned
         # loads NOW, overlapping them with the planning round below.
         plan = None
+        plan_hit = False
+        # the tier caches the up-front CoT planning round; ReAct has no
+        # discrete planning round to skip (read decisions ride the per-step
+        # thought/action rounds), so the cache would be pure lookup cost —
+        # ReAct profiles bypass it entirely
+        pc = self.plan_cache if not react else None
         if self.use_cache:
-            plan = self.controller.plan_reads(task.query, task.required_keys)
+            if pc is not None:
+                # plan-cache consult: one pod-local metadata read, charged
+                # on hit AND miss (the lookup itself is never free)
+                self.clock.advance(self.clock.latency.cache_read(0.0))
+                cached = pc.lookup(task_template_id(task),
+                                   task.required_keys, self.clock.now())
+                yield
+                if cached is not None:
+                    plan = cached
+                    plan_hit = True
+                    trace.plancache_hits += 1
+                    # replay correctness (mnimi's warning): the skipped
+                    # planning round would have consumed eps draws from the
+                    # shared decision RNG — burn the same draws so every
+                    # later draw in the episode lands exactly where a
+                    # forced-miss replay would put it
+                    burn = getattr(self.controller, "consume_plan_noise",
+                                   None)
+                    if burn is not None:
+                        burn(task.required_keys)
+            if plan is None:
+                plan = self.controller.plan_reads(task.query,
+                                                  task.required_keys)
+                if pc is not None:
+                    # install a token-zeroed copy: a future hit serves the
+                    # choices verbatim but charges zero plan tokens (and,
+                    # for an LLMController, no prompt ride-along either)
+                    pc.install(task_template_id(task), task.required_keys,
+                               ReadPlan(dict(plan.choices)),
+                               self.clock.now())
             if self.on_plan is not None:
                 self.on_plan(task, plan)
 
-        if not react:  # CoT: single planning round over the full task
+        if not react and not plan_hit:
+            # CoT: single planning round over the full task — skipped
+            # entirely on a plan-cache hit (zero plan tokens, no endpoint
+            # latency, no retry/hedge exposure)
             trace.tokens += self._llm_round(
                 plan_tokens + STEP_SUMMARY_TOKENS * len(task.steps),
                 PLAN_COMPLETION_TOKENS["cot"])

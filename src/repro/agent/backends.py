@@ -85,6 +85,8 @@ class SimLLM:
             handler = self._recovery_decision
         elif "COHERENCE controller" in prompt:
             handler = self._coherence_decision
+        elif "PLAN-CACHE controller" in prompt:
+            handler = self._plan_cache_decision
         if handler is None:
             # planning / answer prompts: canned completion (token accounting
             # is handled by the agent's latency model)
@@ -233,6 +235,28 @@ class SimLLM:
                         else "serve_stale")
         return ("Thought: weighing the copy's staleness against the "
                 "declared bound.\n"
+                f'Answer: {json.dumps({"decision": decision})}')
+
+    # -- PLAN-CACHE admission (cache vs bypass a fresh plan) -----------------
+    def _plan_cache_decision(self, prompt: str) -> str:
+        """Plan-cache admission decided by reading the policy text: the
+        candidate and victim plan frequencies are in the prompt; the
+        calibrated error rate flips the verdict (a slip can cost planning
+        rounds or churn a hot plan, never correctness — a served plan is
+        always version-exact)."""
+        kf = int(re.findall(r"Candidate plan: \S+ \(estimated frequency: "
+                            r"(\d+)\)", prompt)[-1])
+        vf = int(re.findall(r"Eviction victim if cached: \S+ \(estimated "
+                            r"frequency: (\d+)\)", prompt)[-1])
+        # live policy line precedes the few-shot examples: FIRST match
+        policy = re.search(r"Plan-cache policy: (.*)", prompt).group(1).lower()
+        floor = re.search(r"frequency is at least (\d+)", policy)
+        cache = kf >= (int(floor.group(1)) if floor else 1) and kf >= vf
+        if self.rng.random() < self.profile.cache_eps:
+            cache = not cache
+        decision = "cache" if cache else "bypass"
+        return ("Thought: weighing the candidate plan's request frequency "
+                "against the victim's under the stated policy.\n"
                 f'Answer: {json.dumps({"decision": decision})}')
 
     def _victim(self, state: Dict[str, dict], policy_text: str,

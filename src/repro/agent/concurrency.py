@@ -129,6 +129,7 @@ from repro.core.endpoints import (
     RoutedLLM,
 )
 from repro.core.locality import LocalityModel, make_affinity
+from repro.core.plan_cache import make_plan_cache
 from repro.core.replication import HotKeyReplicator, make_replication
 from repro.core.traffic import ArrivalProcess, TrafficStats, make_traffic
 from repro.core.tools import (
@@ -136,6 +137,7 @@ from repro.core.tools import (
     ToolSpec,
     make_admission_tool,
     make_coherence_tool,
+    make_plan_cache_tool,
     make_recovery_tool,
     make_replication_tool,
 )
@@ -461,6 +463,25 @@ class SharedCacheController:
                 c = "load_db" if c == "read_cache" else "read_cache"
             choices[k] = c
         return ReadPlan(choices)
+
+    def consume_plan_noise(self, required_keys: Sequence[str]) -> None:
+        """Replay-correctness burn for a plan-cache hit (ISSUE 10): the
+        skipped :meth:`plan_reads` would have drawn one eps sample per
+        required key from the session's shared decision RNG — the same
+        stream that later feeds ``draw_task_failure`` / ``draw_bad_calls``
+        / ``draw_step_corruption``. Burn exactly those draws so every
+        subsequent draw lands where a forced-miss replay would put it
+        (same branch structure as plan_reads, including the degraded-mode
+        gate — probed side-effect-free so the skipped round leaves no
+        ``read_checks``/``degraded`` footprint)."""
+        simulate_llm = self.decision_eps and self.rng is not None
+        if simulate_llm and self.endpoints is not None \
+                and not self.endpoints.decision_serviceable():
+            simulate_llm = False
+        if not simulate_llm:
+            return
+        for _ in required_keys:
+            self.rng.random()
 
     def update(self, loads: Sequence[str], loader: Callable[[str], Any],
                size_of: Callable[[Any], int]) -> None:
@@ -1300,6 +1321,13 @@ class CoherenceRuntime:
         self.mutation_times.setdefault(key, []).append(t)
         version = len(self.mutation_times[key])
         self.versions[key] = version
+        pc = self.engine.plan_cache
+        if pc is not None:
+            # plan-cache coupling (ISSUE 10): the version bump just moved
+            # every context digest covering this key, so the covered plans
+            # are already unreachable; under an invalidating policy they
+            # are additionally dropped now (counted as invalidations)
+            pc.note_write(key, invalidate=self.policy.invalidate_on_write)
         st = self.stats
         st.mutations += 1
         if mev.kind == ARRIVAL:
@@ -1468,6 +1496,36 @@ class EpisodeMetrics:
     llm_retry_tokens: int = 0
     llm_retry_wait_s: float = 0.0
     llm_breaker_opens: int = 0
+    # plan-cache tier (ISSUE 10; all zero / 1.0 without a PlanCache).
+    # hits are planning rounds served verbatim from the shared plan cache
+    # (zero plan tokens, no endpoint exposure); installs/rejected/
+    # evictions/expired are the admission policy's install-path verdicts;
+    # invalidations are entries dropped by a covered-key mutation under an
+    # invalidating coherence policy; stale_served is the paranoid
+    # serve-time version guard (structurally 0 — the safety lock asserts
+    # it); agreement/tokens are the GPT-prompted admission path's grading
+    # and decision cost (off the critical path, like admission)
+    plancache_lookups: int = 0
+    plancache_hits: int = 0
+    plancache_hit_rate: float = 0.0
+    plancache_installs: int = 0
+    plancache_rejected: int = 0
+    plancache_evictions: int = 0
+    plancache_expired: int = 0
+    plancache_invalidations: int = 0
+    plancache_stale_served: int = 0
+    plancache_agreement: float = 1.0
+    plancache_tokens: int = 0
+    # token-conservation accounting (ISSUE 10 satellite: the invariant
+    # tests recompute these from the raw traces/policies and assert the
+    # split is exact). tokens_trace_total sums every per-trace bucket;
+    # tokens_decision_total sums the off-critical-path policy decision
+    # costs (admission + replication + recovery + coherence + plan-cache)
+    # plus the endpoint router's retry/hedge-loser tokens;
+    # tokens_fleet_total is their sum — the episode's whole token bill
+    tokens_trace_total: int = 0
+    tokens_decision_total: int = 0
+    tokens_fleet_total: int = 0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -1538,7 +1596,9 @@ class ConcurrentEpisodeEngine:
                  coherence_kw: Optional[Dict] = None,
                  endpoint_fault_plan: Optional[EndpointFaultPlan] = None,
                  n_endpoints: int = 4,
-                 endpoint_kw: Optional[Dict] = None):
+                 endpoint_kw: Optional[Dict] = None,
+                 plan_cache: Optional[str] = None,
+                 plan_cache_kw: Optional[Dict] = None):
         assert n_sessions >= 1 and n_pods >= 1
         if capacity_per_pod < 1:
             raise ValueError(
@@ -1679,6 +1739,29 @@ class ConcurrentEpisodeEngine:
                 "(pass mutations=MutationPlan(...) and/or a coherence "
                 "policy name)")
 
+        # plan-cache tier (ISSUE 10): ONE shared, capacity-bounded cache of
+        # planning-round results keyed (task template, context digest) —
+        # a hit serves the stored ReadPlan verbatim and skips the planning
+        # LLM round entirely (zero plan tokens, no endpoint exposure; a
+        # pod-local lookup read is still charged). Digests embed current
+        # key versions (wired to the coherence runtime per run()), so a
+        # covered-key write makes old plans unreachable; an invalidating
+        # coherence policy additionally drops them eagerly.
+        # ``plan_cache=None`` (the default) skips the tier entirely — the
+        # planning path replays the pre-plan-cache engine bit-identically
+        # (the degeneracy contract tests/test_plan_cache.py locks down).
+        self.plan_cache = None
+        if plan_cache is not None:
+            pc_llm = (self._route(SimLLM(self.profile, seed=seed + 646237))
+                      if plan_cache == "llm" else None)
+            self.plan_cache = make_plan_cache(
+                plan_cache, llm=pc_llm, few_shot=few_shot,
+                **(plan_cache_kw or {}))
+        elif plan_cache_kw:
+            raise ValueError(
+                "plan_cache_kw requires a plan cache (pass "
+                "plan_cache='python'/'programmatic'/'llm')")
+
         # cross-session admission: ONE policy + ONE frequency sketch shared
         # by every pod and session (key popularity is global). The sketch
         # ages on simulated time — touches carry the session clocks, which
@@ -1718,6 +1801,13 @@ class ConcurrentEpisodeEngine:
                                           admission=adm, sketch=self.sketch)
         self.router.locality = self.locality
         self.contention = PodContention(self.pod_ids)
+        if self.plan_cache is not None:
+            # residency is part of a read plan's request context (see
+            # repro.core.plan_cache): bind the digest's residency bit to
+            # the live router, replica-aware like the planner's own check
+            router = self.router
+            self.plan_cache.resident_of = (
+                lambda k: router.locate(k) is not None)
 
         # hot-key replication: one epoch-driven replicator over the shared
         # sketch (see repro.core.replication). ``replication=False`` (the
@@ -1806,6 +1896,11 @@ class ConcurrentEpisodeEngine:
             # replication as a callable cache op (like cache_admit): the
             # agent/controller can query the replicate/drop/hold verdict
             registry.register(make_replication_tool(self.replicator))
+        if self.plan_cache is not None:
+            # the plan-cache tier as a callable cache op (like
+            # cache_admit): probe the cache/bypass verdict and which
+            # cached plans cover a key, without consuming a decision
+            registry.register(make_plan_cache_tool(self.plan_cache))
         if self.admission_policy is not None:
             # admission as a callable cache op against the owning pod's
             # cache; with a locality model the verdict also reports the
@@ -1825,7 +1920,8 @@ class ConcurrentEpisodeEngine:
         session.runner = AgentRunner(registry, controller, llm, clock,
                                      self.store, use_cache=True,
                                      on_plan=on_plan,
-                                     endpoints=self.endpoints)
+                                     endpoints=self.endpoints,
+                                     plan_cache=self.plan_cache)
         return session
 
     # -- async prefetch -----------------------------------------------------
@@ -2068,6 +2164,11 @@ class ConcurrentEpisodeEngine:
                 or self.coherence_policy.refresh_on_write)
             for mev in self.mutation_plan:
                 events.push(mev.at, PRI_FAULT, payload=mev)
+        if self.plan_cache is not None and self._coherence is not None:
+            # versioned context digests (ISSUE 10): the plan cache keys on
+            # key@version, so a covered-key write moves every digest over
+            # it — a lagged plan becomes unreachable under ANY policy
+            self.plan_cache.version_of = self._coherence.current_version
         # endpoint fault schedule (ISSUE 9): decision-plane faults enter
         # the heap at PRI_FAULT like pod faults and writes; the router's
         # analytic windows answer up/slow/limit queries directly, so these
@@ -2249,10 +2350,30 @@ class ConcurrentEpisodeEngine:
         coh = self._coherence
         cpol = self.coherence_policy
         ep = self.endpoints
+        pc = self.plan_cache
+        pcs = pc.stats if pc is not None else None
         parse_fb = sum(getattr(p, "parse_fallbacks", 0)
                        for p in (self.admission_policy,
                                  getattr(self.replicator, "policy", None),
-                                 rec_pol, cpol))
+                                 rec_pol, cpol,
+                                 pc.policy if pc is not None else None))
+        # token-conservation split (ISSUE 10 satellite): per-trace buckets
+        # + off-critical-path decision costs + retry/hedge-loser tokens is
+        # the episode's whole bill — the invariant tests recompute each
+        # side from the raw objects and assert the sum is exact
+        adm_tokens = (getattr(self.admission_policy, "prompt_tokens", 0)
+                      + getattr(self.admission_policy, "completion_tokens",
+                                0))
+        rec_tokens = (getattr(rec_pol, "prompt_tokens", 0)
+                      + getattr(rec_pol, "completion_tokens", 0))
+        coh_tokens = (getattr(cpol, "prompt_tokens", 0)
+                      + getattr(cpol, "completion_tokens", 0))
+        rep_tokens = self.replicator.tokens if self.replicator else 0
+        pc_tokens = pc.tokens if pc is not None else 0
+        retry_tokens = ep.retry_tokens if ep else 0
+        tokens_trace = sum(tr.tokens for s in sessions for tr in s.traces)
+        tokens_decision = (adm_tokens + rep_tokens + rec_tokens + coh_tokens
+                           + pc_tokens + retry_tokens)
         return EpisodeMetrics(
             n_sessions=self.n_sessions,
             n_pods=self.n_pods,
@@ -2285,9 +2406,7 @@ class ConcurrentEpisodeEngine:
             bypass_reads=rstats.bypass_reads,
             admission_agreement=getattr(self.admission_policy, "agreement",
                                         1.0),
-            admission_tokens=(
-                getattr(self.admission_policy, "prompt_tokens", 0)
-                + getattr(self.admission_policy, "completion_tokens", 0)),
+            admission_tokens=adm_tokens,
             replica_hits=rstats.replica_hits,
             replica_installs=rstats.replica_installs,
             replica_drops=rstats.replica_drops,
@@ -2299,8 +2418,7 @@ class ConcurrentEpisodeEngine:
                                  if self.replicator else 0),
             replication_agreement=(self.replicator.agreement
                                    if self.replicator else 1.0),
-            replication_tokens=(self.replicator.tokens
-                                if self.replicator else 0),
+            replication_tokens=rep_tokens,
             locality_local_reads=(self.locality.stats.local_reads
                                   if self.locality else 0),
             locality_remote_reads=(self.locality.stats.remote_reads
@@ -2333,8 +2451,7 @@ class ConcurrentEpisodeEngine:
             recovery_rewarms=fr.rewarms if fr else 0,
             recovery_lazy=fr.lazy if fr else 0,
             recovery_agreement=getattr(rec_pol, "agreement", 1.0),
-            recovery_tokens=(getattr(rec_pol, "prompt_tokens", 0)
-                             + getattr(rec_pol, "completion_tokens", 0)),
+            recovery_tokens=rec_tokens,
             autoscale_actions=fr.autoscale_actions if fr else 0,
             autoscale_deferred=(self.autoscaler.deferred
                                 if self.autoscaler else 0),
@@ -2362,8 +2479,7 @@ class ConcurrentEpisodeEngine:
             coherence_max_staleness_s=(coh.stats.max_staleness_s
                                        if coh else 0.0),
             coherence_agreement=getattr(cpol, "agreement", 1.0),
-            coherence_tokens=(getattr(cpol, "prompt_tokens", 0)
-                              + getattr(cpol, "completion_tokens", 0)),
+            coherence_tokens=coh_tokens,
             llm_calls=ep.llm_calls if ep else 0,
             llm_retries=ep.retries if ep else 0,
             llm_hedges=ep.hedges if ep else 0,
@@ -2373,10 +2489,24 @@ class ConcurrentEpisodeEngine:
             llm_parse_fallbacks=parse_fb,
             llm_degraded_decisions=ep.degraded if ep else 0,
             llm_fallback_share=ep.fallback_share if ep else 0.0,
-            llm_retry_tokens=ep.retry_tokens if ep else 0,
+            llm_retry_tokens=retry_tokens,
             llm_retry_wait_s=sum(s.runner.llm_retry_wait_s
                                  for s in sessions) if ep else 0.0,
             llm_breaker_opens=ep.breaker_opens if ep else 0,
+            plancache_lookups=pcs.lookups if pcs else 0,
+            plancache_hits=pcs.hits if pcs else 0,
+            plancache_hit_rate=pcs.hit_rate if pcs else 0.0,
+            plancache_installs=pcs.installs if pcs else 0,
+            plancache_rejected=pcs.rejected if pcs else 0,
+            plancache_evictions=pcs.evictions if pcs else 0,
+            plancache_expired=pcs.expired if pcs else 0,
+            plancache_invalidations=pcs.invalidations if pcs else 0,
+            plancache_stale_served=pcs.stale_served if pcs else 0,
+            plancache_agreement=pc.agreement if pc is not None else 1.0,
+            plancache_tokens=pc_tokens,
+            tokens_trace_total=tokens_trace,
+            tokens_decision_total=tokens_decision,
+            tokens_fleet_total=tokens_trace + tokens_decision,
         )
 
 

@@ -187,7 +187,8 @@ class WorkloadSampler:
                  scenario: str = "working", zipf_a: float = 1.2,
                  zipf_global: bool = False,
                  hot_k: int = 4, hot_p: float = 0.9, phase_len: int = 60,
-                 n_groups: int = 4, group: int = 0, spill_p: float = 0.15):
+                 n_groups: int = 4, group: int = 0, spill_p: float = 0.15,
+                 repeat_p: float = 0.0, repeat_pool: int = 12):
         # fail-fast parameter validation (ISSUE 7): a bad rate/probability
         # here silently skews every downstream table — reject loudly
         if not 0.0 <= reuse_rate <= 1.0:
@@ -252,6 +253,39 @@ class WorkloadSampler:
         self.hot_k, self.hot_p, self.phase_len = hot_k, hot_p, phase_len
         self._hot: List[str] = []
         self._draws = 0
+        # request-level task repeats (ISSUE 10): with probability
+        # ``repeat_p`` a task draw returns a fresh-tid copy of one of
+        # ``repeat_pool`` canned tasks — the "users keep asking the same
+        # question" pattern that makes a plan cache worth having. The
+        # library is seed-INDEPENDENT (like zipf_global / the mutation-hot
+        # order), so every session of an episode samples the same canned
+        # tasks and repeats collide ACROSS sessions; its keys skew to the
+        # head of the shared 0x5EED shuffle so repeated tasks also share
+        # data. ``repeat_p == 0`` (the default) skips the gate draw
+        # entirely — every pre-existing scenario's RNG stream, and every
+        # digest built on it, is byte-identical.
+        if not 0.0 <= repeat_p <= 1.0:
+            raise ValueError(f"repeat_p must be in [0, 1], got {repeat_p}")
+        if repeat_pool < 1:
+            raise ValueError(f"repeat_pool must be >= 1, got {repeat_pool}")
+        self.repeat_p = repeat_p
+        self._library: List[Task] = []
+        if repeat_p > 0.0:
+            lib_rng = random.Random(0x9A17)
+            order = list(self.keys)
+            random.Random(0x5EED).shuffle(order)
+            head = order[:max(2 * WORKING_SET, hot_k)]
+            for i in range(repeat_pool):
+                steps, keys = [], []
+                for _ in range(lib_rng.randint(3, 5)):
+                    kind = lib_rng.choice(STEP_KINDS)
+                    key = lib_rng.choice(head)
+                    steps.append(_mk_step(kind, key, lib_rng))
+                    if key not in keys:
+                        keys.append(key)
+                self._library.append(Task(
+                    tid=-1 - i, query=" Then, ".join(s.prompt for s in steps),
+                    steps=steps, required_keys=keys))
 
     def _sample_key(self) -> str:
         if self.scenario == "zipf":
@@ -305,6 +339,14 @@ class WorkloadSampler:
         return key
 
     def sample_task(self, tid: int) -> Task:
+        if self.repeat_p and self.rng.random() < self.repeat_p:
+            lib = self.rng.choice(self._library)
+            # fresh-tid copy with per-copy Step objects: compute_gold fills
+            # gold per copy, and shared immutable plans/prompts are safe
+            return Task(tid=tid, query=lib.query,
+                        steps=[Step(kind=s.kind, key=s.key, prompt=s.prompt,
+                                    plan=s.plan) for s in lib.steps],
+                        required_keys=list(lib.required_keys))
         n_steps = self.rng.randint(3, 5)
         steps, keys = [], []
         for _ in range(n_steps):
@@ -386,7 +428,15 @@ def answers_equal(a: Any, b: Any) -> bool:
 
 def model_check(tasks: List[Task], store: GeoDataStore) -> List[int]:
     """Paper §IV: 'use the model-checker module to verify the functional
-    correctness of the generated tasks'. Returns ids of BROKEN tasks."""
+    correctness of the generated tasks'. Returns ids of BROKEN tasks.
+
+    Only the expected failure modes of a malformed task mark it broken:
+    ``KeyError`` (a required key the store does not carry, an unresolved
+    ``$var`` reference) and ``ValueError`` (a tool rejecting bad arguments,
+    the gold mismatch below). Anything else — a ``TypeError`` from a buggy
+    tool, an ``AttributeError`` from a bad frame object — is a programming
+    error in the checker's own dependencies and must propagate, not be
+    silently laundered into "task is broken"."""
     bad = []
     for t in tasks:
         try:
@@ -396,7 +446,7 @@ def model_check(tasks: List[Task], store: GeoDataStore) -> List[int]:
                 if a is None or (s.gold is not None and
                                  not answers_equal(a, s.gold)):
                     raise ValueError(f"step gold mismatch in task {t.tid}")
-        except Exception:
+        except (ValueError, KeyError):
             bad.append(t.tid)
     return bad
 

@@ -535,6 +535,17 @@ class EndpointRouter:
             self.degraded += 1
         return ok
 
+    def decision_serviceable(self) -> bool:
+        """Pure twin of :meth:`decision_available`: same window logic, NO
+        counter side effects. Used by the plan-cache hit path to burn the
+        exact eps draws a fresh plan would have consumed — the skipped
+        round must not perturb ``read_checks``/``degraded`` (and through
+        them ``fallback_share``), or a hit would change the episode's
+        decision-plane accounting."""
+        t = self.now
+        return any(self.up(ep, t) and self.retry_after(ep, t) == 0.0
+                   for ep in self._candidates(t))
+
     # -- scheduler hook ------------------------------------------------------
     def apply(self, t: float, ev: EndpointFaultEvent) -> None:
         """PRI_FAULT bookkeeping: windows are analytic, so events only

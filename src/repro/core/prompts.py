@@ -284,6 +284,54 @@ def coherence_decision_prompt(policy_text: str, key: str, staleness_s: float,
     return "".join(parts)
 
 
+PLAN_CACHE_FEWSHOT = """Example 1:
+Plan-cache policy: TTL + frequency (a cached plan expires 180 seconds after install; CACHE a new plan only if its request frequency is at least 1 and, when the cache is full, at least the evicted plan's frequency).
+Candidate plan: detect>plot#2 (estimated frequency: 5)
+Eviction victim if cached: count>vqa#1 (estimated frequency: 1)
+Thought: the candidate template is requested far more often than the coldest resident — caching it converts repeated planning rounds into lookups.
+Answer: {"decision": "cache"}
+
+Example 2:
+Plan-cache policy: TTL + frequency (a cached plan expires 180 seconds after install; CACHE a new plan only if its request frequency is at least 1 and, when the cache is full, at least the evicted plan's frequency).
+Candidate plan: timeseries#1 (estimated frequency: 1)
+Eviction victim if cached: detect>lcc>plot#3 (estimated frequency: 7)
+Thought: a one-shot plan must not displace a frequently replayed one; let this request stream through.
+Answer: {"decision": "bypass"}
+"""
+
+
+def plan_cache_decision_prompt(policy_text: str, template: str,
+                               victim_template: str, freq: int,
+                               victim_freq: int, ttl_s: float,
+                               few_shot: bool) -> str:
+    """Prompt for the GPT-driven PLAN-CACHE admission decision (ISSUE 10):
+    a planning round just completed for a (task template, context digest)
+    request and the plan cache is FULL. Decide CACHE (store the fresh plan,
+    evicting the least-recently-used resident) or BYPASS (serve this
+    request's plan without storing it)."""
+    parts = [SYSTEM_HEADER,
+             "You are now the PLAN-CACHE controller. The agent just paid a "
+             "full LLM planning round for the task template below and the "
+             "plan cache is FULL. A cached plan is served verbatim to every "
+             "later request with the same template over the same data-key "
+             "versions, skipping that request's planning round entirely. "
+             "Apply the plan-cache policy below and decide whether to "
+             "CACHE the fresh plan (evicting the victim) or BYPASS the "
+             "cache (the plan is used once and not stored).\n",
+             f"Plan-cache policy: {policy_text}\n"]
+    if few_shot:
+        parts.append(PLAN_CACHE_FEWSHOT)
+    parts.append(f"Candidate plan: {template} "
+                 f"(estimated frequency: {freq})\n")
+    parts.append(f"Eviction victim if cached: {victim_template} "
+                 f"(estimated frequency: {victim_freq})\n")
+    parts.append(f"Entry time-to-live: {ttl_s:g}s\n")
+    parts.append('Respond with a JSON object: {"decision": "cache"} or '
+                 '{"decision": "bypass"}.\n')
+    parts.append("Answer (JSON): ")
+    return "".join(parts)
+
+
 def parse_json_tail(text: str):
     """Parse the trailing JSON object/list from an LLM completion."""
     text = text.strip()

@@ -262,6 +262,56 @@ def make_coherence_tool(runtime, sketch) -> ToolSpec:
         fn=cache_update)
 
 
+def make_plan_cache_tool(plan_cache) -> ToolSpec:
+    """The plan-cache tier as a callable cache op: ``cache_plan(key)``
+    answers whether a fresh plan whose context covers `dataset-year` would
+    currently be CACHED or BYPASSED by the plan-cache admission policy —
+    with the evidence (the key's covering entries, the cache's occupancy,
+    the LRU victim's plan frequency) the decision is based on.
+
+    Exposed in the same function-calling schema as ``read_cache`` /
+    ``load_db`` / ``cache_admit`` / ``cache_replicate`` / ``cache_recover``
+    / ``cache_update`` (the paper's cache-ops-as-tools design extended to
+    the decision plane). Querying is side-effect-free: real admissions
+    happen on the install path after a planning round, the plan-key sketch
+    is read without interning, and the probe always answers with the
+    programmatic base rule — a diagnostic must not consume LLM tokens or
+    grading samples."""
+
+    def cache_plan(key: str):
+        pol = plan_cache.policy
+        base = getattr(pol, "base", pol)     # LLM wrapper: probe the rule
+        covered = plan_cache.covered_entries(key)
+        out = {"key": key, "decision": "cache",
+               "covered_plans": ["|".join(ck) for ck in covered],
+               "entries": len(plan_cache.entries),
+               "capacity": plan_cache.capacity,
+               "victim": None, "victim_freq": 0,
+               "ttl_s": base.ttl_s, "min_freq": base.min_freq,
+               "reason": "plan cache not full"}
+        if len(plan_cache.entries) >= plan_cache.capacity:
+            victim_ck = next(iter(plan_cache.entries))
+            vf = int(plan_cache.sketch.estimate_peek("|".join(victim_ck)))
+            # probe verdict for a typical repeat (frequency = min_freq):
+            # would a plan exactly at the floor displace the LRU victim?
+            ok = base.admit(base.min_freq, vf)
+            out.update(decision="cache" if ok else "bypass",
+                       victim="|".join(victim_ck), victim_freq=vf,
+                       reason=base.name)
+        return out
+
+    return ToolSpec(
+        name="cache_plan",
+        description=("Ask the PLAN-CACHE admission policy whether a fresh "
+                     "planning round over a context covering `dataset-year` "
+                     "would currently be cached (evicting the named victim "
+                     "plan when full) or bypassed, and which cached plans "
+                     "already cover the key."),
+        parameters={"key": {"type": "string",
+                            "description": "dataset-year, e.g. xview1-2022"}},
+        fn=cache_plan)
+
+
 class ToolRegistry:
     """Function-calling registry: schemas for the prompt, dispatch at runtime."""
 

@@ -21,6 +21,9 @@ from repro.launch.dryrun import (
     collective_bytes,
 )
 
+# heavy lower+compile smokes: CI's full-suite lane runs these (pytest.ini)
+pytestmark = pytest.mark.slow
+
 SMALL_SHAPES = {
     "train": ShapeSpec("train_small", 64, 4, "train"),
     "prefill": ShapeSpec("prefill_small", 64, 2, "prefill"),

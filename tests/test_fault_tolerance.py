@@ -44,6 +44,8 @@ def test_preemption_guard_checkpoints_once():
     assert g.preempted
 
 
+@pytest.mark.slow
+@pytest.mark.slow
 def test_train_loop_survives_failures_and_resumes(tmp_path):
     cfg = get_config("dcache-agent-150m").reduced()
     params, _ = unbox(init_model(Init(jax.random.PRNGKey(0),

@@ -12,6 +12,9 @@ from repro.models import Init, decode_step, init_model, loss_fn, prefill_step, u
 
 RNG = np.random.default_rng(0)
 
+# heavy JAX smokes: CI's full-suite lane runs these (see pytest.ini)
+pytestmark = pytest.mark.slow
+
 
 def make_batch(cfg, B=2, S=16, with_targets=True):
     batch = {}

@@ -19,6 +19,7 @@ def _params(cfg):
                                  dtype=cfg.jnp_dtype), cfg))[0]
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_close_to_fp():
     cfg0 = dataclasses.replace(get_config("qwen1.5-32b").reduced(),
                                dtype="float32")
@@ -36,6 +37,7 @@ def test_int8_kv_cache_close_to_fp():
 
 @pytest.mark.parametrize("arch", ["hymba-1.5b", "mixtral-8x22b",
                                   "llama4-maverick-400b-a17b"])
+@pytest.mark.slow
 def test_windowed_kv_slicing_matches_full_attention(arch):
     """The §Perf KV-slicing fast path must be bit-for-bit equivalent to
     full-row chunked attention (same mask, fewer scored keys)."""

@@ -3,6 +3,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import Init, init_model, unbox
@@ -32,6 +33,7 @@ def test_sampler_greedy_and_topk():
     assert out2.tolist() == [1, 2]             # top-1 == greedy
 
 
+@pytest.mark.slow
 def test_batched_requests_complete():
     eng = engine()
     reqs = [eng.submit(p, max_new_tokens=6) for p in
@@ -43,6 +45,7 @@ def test_batched_requests_complete():
     assert s["finished"] == 3 and s["throughput_tok_s"] > 0
 
 
+@pytest.mark.slow
 def test_more_requests_than_slots():
     eng = engine(max_batch=2)
     reqs = [eng.submit(f"req {i}", max_new_tokens=4) for i in range(5)]
@@ -50,6 +53,7 @@ def test_more_requests_than_slots():
     assert all(r.done for r in reqs)
 
 
+@pytest.mark.slow
 def test_greedy_determinism_across_batching():
     """A request must decode the same tokens alone or batched (slots are
     independent: ring caches + per-row pos)."""
@@ -65,6 +69,7 @@ def test_greedy_determinism_across_batching():
     assert r_alone.out_ids == r_b.out_ids
 
 
+@pytest.mark.slow
 def test_padding_invariance():
     """Bucket padding must not change the decoded tokens (mask proof)."""
     eng = engine(max_batch=1)
@@ -85,6 +90,7 @@ def test_padding_invariance():
     assert r1.out_ids == r2.out_ids
 
 
+@pytest.mark.slow
 def test_max_len_cap_terminates():
     eng = engine(max_batch=1, max_len=24)
     r = eng.submit("x" * 10, max_new_tokens=500)

@@ -46,6 +46,8 @@ def test_adamw_moves_params_against_gradient():
     assert m["grad_norm"] > 0
 
 
+@pytest.mark.slow
+@pytest.mark.slow
 def test_loss_decreases_over_training():
     cfg = small_cfg()
     params, _ = unbox(init_model(Init(jax.random.PRNGKey(0),
@@ -62,6 +64,8 @@ def test_loss_decreases_over_training():
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
 
 
+@pytest.mark.slow
+@pytest.mark.slow
 def test_grad_accum_matches_full_batch():
     cfg = dataclasses.replace(small_cfg(), dtype="float32")
     params, _ = unbox(init_model(Init(jax.random.PRNGKey(0),
